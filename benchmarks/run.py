@@ -1,0 +1,110 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines (one per benchmark).
+
+  table1_orderings : paper Table 1  (AverageHops of H/Z/FZ/MFZ)
+  minighost        : paper Figs. 13-15 (weak scaling, sparse Gemini)
+  homme_bgq        : paper Table 2 + Figs. 8-9 (BG/Q 5D torus)
+  homme_titan      : paper Figs. 10-12 (sparse Gemini, Z2_1/2/3)
+  mapping_tpu      : beyond-paper TPU v5e logical-mesh mapping
+  roofline         : deliverable (g) from the dry-run artifacts
+
+``--full`` runs the complete Table 1 (up to 2^20-point rows, ~4 min) and
+all scaling points; the default caps sizes for a fast harness pass.
+"""
+
+import argparse
+import sys
+import time
+
+
+def _run(name, fn):
+    t0 = time.perf_counter()
+    try:
+        fn()
+    except Exception as e:  # noqa: BLE001
+        dt = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{dt:.0f},ERROR:{type(e).__name__}:{e}")
+        return False
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="run full-size Table 1 and all scaling points")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (homme_bgq, homme_titan, mapping_tpu, minighost,
+                            roofline, table1_orderings)
+
+    def table1():
+        if args.full:
+            table1_orderings.main()
+        else:
+            t0 = time.perf_counter()
+            results, worst = table1_orderings.run(max_tasks=65536,
+                                                  quiet=True)
+            dt = (time.perf_counter() - t0) * 1e6 / max(len(results), 1)
+            print(f"table1_orderings,{dt:.0f},"
+                  f"rows={len(results)};max_rel_err_vs_paper_ZFZMFZ="
+                  f"{worst:.4f}")
+
+    def mini():
+        if args.full:
+            minighost.main()
+        else:
+            t0 = time.perf_counter()
+            res = minighost.run(core_counts=(8192, 32768), seeds=(0,),
+                                quiet=True)
+            h = minighost.headline(res)
+            dt = (time.perf_counter() - t0) * 1e6 / len(res)
+            print(f"minighost,{dt:.0f},"
+                  f"lat_red_vs_default="
+                  f"{h['latency_reduction_vs_default']:.2f}"
+                  f";geo_growth={h['geo_hops_growth_weak_scaling']:.2f}")
+
+    def bgq():
+        if args.full:
+            homme_bgq.main()
+        else:
+            t0 = time.perf_counter()
+            res = homme_bgq.run(rank_counts=(8192,), quiet=True)
+            best = min((v["data_vs_sfc"], k)
+                       for k, v in res[8192].items()
+                       if not k.startswith("_"))
+            dt = (time.perf_counter() - t0) * 1e6
+            print(f"homme_bgq,{dt:.0f},best_data_vs_sfc={best[0]:.3f}"
+                  f";variant={best[1]}")
+
+    def titan():
+        if args.full:
+            homme_titan.main()
+        else:
+            t0 = time.perf_counter()
+            res = homme_titan.run(rank_counts=(10800,), seeds=(0,),
+                                  quiet=True)
+            z = res[10800]["Z2_2"]
+            dt = (time.perf_counter() - t0) * 1e6
+            print(f"homme_titan,{dt:.0f},z2_2_wh_vs_sfc={z['WH']:.3f}"
+                  f";z2_2_lat_vs_sfc={z['Latency']:.3f}")
+
+    benches = {
+        "table1_orderings": table1,
+        "minighost": mini,
+        "homme_bgq": bgq,
+        "homme_titan": titan,
+        "mapping_tpu": mapping_tpu.main,
+        "roofline": roofline.main,
+    }
+    ok = True
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        ok = _run(name, fn) and ok
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == '__main__':
+    main()

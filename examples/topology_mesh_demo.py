@@ -1,0 +1,52 @@
+"""The paper's technique as a JAX feature: topology-aware device meshes.
+
+Builds a logical (data, model) mesh over fake devices with the geometric
+mapper choosing the device order (candidate search: default order + MJ/FZ
+mappings x rotations, scored by the modeled bottleneck-link latency), and
+shows the report for a mismatched logical shape where the geometric
+mapping beats enumeration order.
+
+Run:  PYTHONPATH=src python examples/topology_mesh_demo.py
+(sets 256 fake host devices before importing jax)
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=256")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec  # noqa: E402
+
+from repro.meshmap.device_mesh import topology_mesh  # noqa: E402
+
+
+def main():
+    # a logical shape that does NOT match the 16x16 physical torus:
+    # 64-way FSDP x 4-way TP.  Row-major enumeration wraps the heavy TP
+    # rings across torus rows; the geometric mapping keeps them compact.
+    mesh, report = topology_mesh((64, 4), ("data", "model"),
+                                 return_report=True)
+    print("mesh:", mesh)
+    for k in ("default", "mapped"):
+        m = report[k]
+        print(f"{k:>8s}: weighted_hops={m['weighted_hops']:.0f} "
+              f"latency_max={m['latency_max']:.4f}")
+    win = 1 - report["mapped"]["latency_max"] / max(
+        report["default"]["latency_max"], 1e-12)
+    print(f"modeled bottleneck-link latency reduction: {win:.0%}")
+
+    # the mesh is a first-class jax Mesh: shard a matmul over it
+    x = jnp.ones((128, 256))
+    w = jnp.ones((256, 512))
+    with mesh:
+        y = jax.jit(
+            lambda a, b: a @ b,
+            in_shardings=(NamedSharding(mesh, PartitionSpec("data", None)),
+                          NamedSharding(mesh, PartitionSpec(None, "model"))),
+        )(x, w)
+    print("sharded matmul OK:", y.shape, float(y[0, 0]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Mapping quality metrics (paper §3, Eqns. 1-7).
+
+All metrics assume static dimension-ordered routing (dim 0 first, then dim
+1, ...), shortest direction per dimension on tori, messages never split
+across paths — the paper's assumptions.  Links are directed (the paper's
+Fig. 12 reports X+/X- separately).
+
+Core dimensions of a machine (intra-node) contribute zero hops and carry
+no accountable traffic (infinite bandwidth), matching the paper's
+treatment of multicore nodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .machine import Machine
+
+
+# ---------------------------------------------------------------------------
+# Hops (Eqns. 1-3)
+# ---------------------------------------------------------------------------
+
+def pairwise_hops(machine: Machine, src: np.ndarray, dst: np.ndarray
+                  ) -> np.ndarray:
+    """Shortest-path hop count between coordinate rows (per message)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    nd = machine.ndim - machine.core_dims
+    total = np.zeros(len(src), dtype=np.int64)
+    for k in range(nd):
+        s = machine.dims[k]
+        d = np.abs(src[:, k] - dst[:, k])
+        if machine.wrap[k]:
+            d = np.minimum(d, s - d)
+        total += d
+    return total
+
+
+def total_hops(machine, src, dst) -> int:
+    return int(pairwise_hops(machine, src, dst).sum())
+
+
+def average_hops(machine, src, dst) -> float:
+    h = pairwise_hops(machine, src, dst)
+    return float(h.mean()) if len(h) else 0.0
+
+
+def weighted_hops(machine, src, dst, weights) -> float:
+    h = pairwise_hops(machine, src, dst)
+    return float((h * np.asarray(weights)).sum())
+
+
+# ---------------------------------------------------------------------------
+# Per-link traffic under dimension-ordered routing (Eqns. 4-7)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Traffic:
+    """Directed per-link traffic.
+
+    ``pos[k]`` has the machine's full shape; entry at coordinate ``x`` is
+    the bytes crossing the + link of ``x`` along dim ``k`` (from x to
+    x+e_k, wrapping).  ``neg[k]`` likewise for the - direction (from
+    x+e_k down to x).  Core dims carry no entries (None).
+    """
+
+    machine: Machine
+    pos: list
+    neg: list
+
+    def link_data(self) -> np.ndarray:
+        """All directed link loads as one flat vector (network dims only)."""
+        parts = []
+        nd = self.machine.ndim - self.machine.core_dims
+        for k in range(nd):
+            parts.append(self.pos[k].ravel())
+            parts.append(self.neg[k].ravel())
+        return np.concatenate(parts) if parts else np.zeros(0)
+
+    def link_latency(self) -> np.ndarray:
+        parts = []
+        nd = self.machine.ndim - self.machine.core_dims
+        for k in range(nd):
+            idx = np.arange(self.machine.dims[k])
+            bw = self.machine.bw(k, idx)  # pattern along dim k
+            shape = [1] * self.machine.ndim
+            shape[k] = self.machine.dims[k]
+            bw_full = np.broadcast_to(bw.reshape(shape), self.machine.dims)
+            parts.append((self.pos[k] / bw_full).ravel())
+            parts.append((self.neg[k] / bw_full).ravel())
+        return np.concatenate(parts) if parts else np.zeros(0)
+
+
+def route_traffic(machine: Machine, src: np.ndarray, dst: np.ndarray,
+                  weights: np.ndarray | None = None) -> Traffic:
+    """Accumulate per-link traffic for messages src->dst (dim-ordered)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    nmsg = len(src)
+    if weights is None:
+        weights = np.ones(nmsg)
+    w = np.asarray(weights, dtype=np.float64)
+    nd = machine.ndim - machine.core_dims
+    dims = machine.dims
+
+    pos = [np.zeros(dims) for _ in range(nd)]
+    neg = [np.zeros(dims) for _ in range(nd)]
+
+    # current position starts at src; after routing dim k it holds dst[:k+1]
+    cur = src.copy()
+    for k in range(nd):
+        s = dims[k]
+        a = cur[:, k]
+        b = dst[:, k]
+        if machine.wrap[k]:
+            fwd = (b - a) % s
+            bwd = (a - b) % s
+            use_fwd = fwd <= bwd
+            length_f = np.where(use_fwd, fwd, 0)
+            length_b = np.where(use_fwd, 0, bwd)
+        else:
+            use_fwd = b >= a
+            length_f = np.where(use_fwd, b - a, 0)
+            length_b = np.where(use_fwd, 0, a - b)
+
+        # rows: all machine dims fixed except k. Row coordinate is `cur`
+        # with dim k removed.  (Core dims stay at the src's core coords —
+        # they are free, routing order irrelevant.)
+        other = [cur[:, j] for j in range(machine.ndim) if j != k]
+        row_dims = tuple(d for j, d in enumerate(dims) if j != k)
+        if row_dims:
+            row = np.ravel_multi_index(other, row_dims)
+        else:
+            row = np.zeros(nmsg, dtype=np.int64)
+        nrows = int(np.prod(row_dims)) if row_dims else 1
+
+        # + direction: links a, a+1, ..., a+len-1 (mod s)
+        _accumulate_circular(pos[k], row, nrows, s, a, length_f, w,
+                             dims, k)
+        # - direction: crossing from a down by len uses - channels at
+        # indices (a-1, a-2, ..., a-len) mod s == start (a-len) length len
+        start_b = (a - length_b) % s if machine.wrap[k] else a - length_b
+        _accumulate_circular(neg[k], row, nrows, s, start_b, length_b, w,
+                             dims, k)
+        cur = cur.copy()
+        cur[:, k] = b
+    return Traffic(machine, pos, neg)
+
+
+def _accumulate_circular(out, row, nrows, s, start, length, w, dims, k):
+    """Range-add ``w`` to circular intervals [start, start+length) of each
+    row's 1D link array, writing into ``out`` (full machine shape)."""
+    m = length > 0
+    if not m.any():
+        return
+    row = row[m]
+    start = start[m] % s
+    length = length[m]
+    ww = w[m]
+    diff = np.zeros((nrows, s + 1))
+    end = start + length
+    nowrap = end <= s
+    # non-wrapping part
+    np.add.at(diff, (row, start), ww)
+    np.add.at(diff, (row[nowrap], end[nowrap]), -ww[nowrap])
+    # wrapping tail: [0, end-s)
+    wr = ~nowrap
+    if wr.any():
+        np.add.at(diff, (row[wr], np.zeros(wr.sum(), dtype=int)), ww[wr])
+        np.add.at(diff, (row[wr], end[wr] - s), -ww[wr])
+        np.add.at(diff, (row[wr], np.full(wr.sum(), s)), -ww[wr])
+    lane = np.cumsum(diff[:, :s], axis=1)
+    # scatter back into the machine-shaped array: move axis k last
+    shape_rows = tuple(d for j, d in enumerate(dims) if j != k)
+    lane = lane.reshape(shape_rows + (s,)) if shape_rows else lane.reshape(s)
+    out += np.moveaxis(lane, -1, k)
+
+
+# ---------------------------------------------------------------------------
+# Aggregate metrics
+# ---------------------------------------------------------------------------
+
+def data_metric(traffic: Traffic) -> float:
+    """Data(M) = max over links of Data(e)  (Eqn. 5)."""
+    d = traffic.link_data()
+    return float(d.max()) if len(d) else 0.0
+
+
+def latency_metric(traffic: Traffic) -> float:
+    """Latency(M) = max over links of Data(e)/bw(e)  (Eqn. 7)."""
+    l = traffic.link_latency()
+    return float(l.max()) if len(l) else 0.0
+
+
+def per_dim_stats(traffic: Traffic) -> dict:
+    """Per-dimension, per-direction max/mean Data and Latency (Figs 9/12)."""
+    out = {}
+    m = traffic.machine
+    nd = m.ndim - m.core_dims
+    for k in range(nd):
+        idx = np.arange(m.dims[k])
+        bw = m.bw(k, idx)
+        shape = [1] * m.ndim
+        shape[k] = m.dims[k]
+        bw_full = np.broadcast_to(np.asarray(bw).reshape(shape), m.dims)
+        for sign, arr in (("+", traffic.pos[k]), ("-", traffic.neg[k])):
+            key = f"dim{k}{sign}"
+            out[key] = {
+                "data_max": float(arr.max()),
+                "data_mean": float(arr.mean()),
+                "lat_max": float((arr / bw_full).max()),
+                "lat_mean": float((arr / bw_full).mean()),
+            }
+    return out
+
+
+def evaluate_mapping(machine: Machine, task_edges: np.ndarray,
+                     edge_weights: np.ndarray | None,
+                     task_to_coord: np.ndarray) -> dict:
+    """All paper metrics for a mapping.
+
+    task_edges    : (E, 2) task index pairs.
+    edge_weights  : (E,) message volumes (None = uniform 1).
+    task_to_coord : (ntasks, ndim) machine coordinate of each task.
+    """
+    src = task_to_coord[task_edges[:, 0]]
+    dst = task_to_coord[task_edges[:, 1]]
+    if edge_weights is None:
+        edge_weights = np.ones(len(task_edges))
+    h = pairwise_hops(machine, src, dst)
+    traffic = route_traffic(machine, src, dst, edge_weights)
+    nz = int(np.count_nonzero(h))
+    return {
+        "total_hops": int(h.sum()),
+        "average_hops": float(h.mean()) if len(h) else 0.0,
+        "weighted_hops": float((h * edge_weights).sum()),
+        "data_max": data_metric(traffic),
+        "latency_max": latency_metric(traffic),
+        "num_messages": len(task_edges),
+        "num_offnode_messages": nz,
+        "per_dim": per_dim_stats(traffic),
+    }

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the substrate's compute hot-spots.
+
+flash_attention/  causal/SWA/softcap GQA attention (VMEM online softmax)
+ssd/              Mamba2 state-space-duality chunked scan
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper, interpret-mode fallback off-TPU) and ref.py (pure-jnp oracle);
+tests/test_kernels.py sweeps shapes/dtypes against the oracles.
+"""

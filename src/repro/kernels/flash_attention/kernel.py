@@ -1,0 +1,129 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation notes (vs the CUDA flash-attention algorithm):
+
+- Tiling targets the MXU: block shapes are multiples of 128 in the lane
+  dim and the (bq, bk) tile is sized so q-block, k-block, v-block and the
+  f32 accumulators fit VMEM (~16 MB/core budget; the default 512x512
+  blocks with D<=256 use < 4 MB).
+- The grid is (B*H, S/bq, T/bk) with the key dimension innermost and
+  "arbitrary" semantics: TPU grids execute sequentially, so the running
+  max / denominator / accumulator live in VMEM scratch across the k
+  sweep (no atomics, no shared-memory cross-warp reductions as on GPU —
+  the online-softmax state is private to the core).
+- GQA is handled by the k/v BlockSpec index maps (kv head = h // G), so
+  grouped keys are never materialised per query head.
+- Causal + sliding-window tiles that are fully masked are skipped via
+  pl.when on the block indices (structural skip, not a data branch).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 bq: int, bk: int, nk: int, scale: float, causal: bool,
+                 window: int, cap: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # structural skip of fully-masked tiles
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + bq - 1)
+    if window:
+        live = jnp.logical_and(live, k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if cap:
+            s = jnp.tanh(s / cap) * cap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok = jnp.logical_and(ok, qpos >= kpos)
+        if window:
+            ok = jnp.logical_and(ok, qpos - kpos < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         cap: float = 0.0, bq: int = 512, bk: int = 512,
+                         interpret: bool = False):
+    """q: (B, H, S, D); k/v: (B, KH, T, D), KH | H.  S % bq == T % bk == 0."""
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    g = h // kh
+    bq = min(bq, s)
+    bk = min(bk, t)
+    nq = s // bq
+    nk = t // bk
+    assert nq * bq == s and nk * bk == t, (s, t, bq, bk)
+
+    def q_map(bh, qi, ki):
+        return (bh // h, bh % h, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return (bh // h, (bh % h) // g, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, bq=bq, bk=bk, nk=nk, scale=d ** -0.5, causal=causal,
+        window=window, cap=cap)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), q_map),
+            pl.BlockSpec((1, 1, bk, d), kv_map),
+            pl.BlockSpec((1, 1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

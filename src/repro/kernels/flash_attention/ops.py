@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Adapts the model layout (B, S, H, D) to the kernel layout (B, H, S, D),
+pads sequence lengths to block multiples, and falls back to interpret
+mode automatically on non-TPU backends (this container is CPU-only; the
+kernel body still executes, validating it end-to-end).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    cap: float = 0.0, bq: int = 512, bk: int = 512,
+                    interpret: bool | None = None):
+    """q: (B, S, H, D); k/v: (B, T, KH, D).  Returns (B, S, H, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq_ = min(bq, s)
+    bk_ = min(bk, t)
+    pad_q = (-s) % bq_
+    pad_k = (-t) % bk_
+    if pad_k and not causal:
+        raise ValueError("key padding requires causal masking to be safe; "
+                         "pass block sizes dividing T for non-causal use")
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               cap=cap, bq=bq_, bk=bk_, interpret=interpret)
+    if pad_q:
+        out = out[:, :, :s]
+    return out.transpose(0, 2, 1, 3)

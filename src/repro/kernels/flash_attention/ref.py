@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout is the kernel's (B, H, S, D) — the ops.py wrapper adapts the model
+layout.  Supports GQA (kv_heads divides heads), causal masking, sliding
+windows and gemma-style logit soft-capping, matching the kernel feature
+set exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  cap: float = 0.0):
+    """q: (B, H, S, D); k/v: (B, KH, T, D) with KH | H."""
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    g = h // kh
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(b, kh, g, s, d)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qf, kf)
+    if cap:
+        scores = jnp.tanh(scores / cap) * cap
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if window:
+        ok &= qpos - kpos < window
+    scores = jnp.where(ok, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    return out.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the SSD kernel, in model-layer layout.
+
+Accepts the mamba_block quantities (x, dt, A, B, C per head group) and
+returns y, matching repro.models.layers.ssd_reference semantics (without
+the final state, which training doesn't need).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool | None = None):
+    """x: (b, l, h, p); dt: (b, l, h); A: (h,); B, C: (b, l, n).
+
+    Returns y: (b, l, h, p).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    # fold (b, h) into the kernel's row dim; broadcast B/C across heads
+    xdt = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(b * h, l, p)
+    a = (dt * A[None, None, :]).transpose(0, 2, 1).reshape(b * h, l)
+    Bb = jnp.broadcast_to(B[:, None], (b, h, l, n)).reshape(b * h, l, n)
+    Cb = jnp.broadcast_to(C[:, None], (b, h, l, n)).reshape(b * h, l, n)
+    y = ssd_scan(xdt, a, Bb, Cb, chunk=min(chunk, l), interpret=interpret)
+    return y.reshape(b, h, l, p).transpose(0, 2, 1, 3).astype(x.dtype)

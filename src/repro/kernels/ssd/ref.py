@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Mamba2 SSD kernel: the naive per-step
+recurrence (exact semantics, O(L) sequential)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, a, B, C):
+    """Naive SSD recurrence.
+
+    x : (BH, L, P)  -- dt-premultiplied inputs (dt_j * x_j)
+    a : (BH, L)     -- log-decay increments (dt_j * A_h, negative)
+    B : (BH, L, N)
+    C : (BH, L, N)
+    returns y: (BH, L, P), final state (BH, N, P)
+
+    Recurrence:  S_t = exp(a_t) S_{t-1} + B_t^T x_t ;  y_t = C_t S_t.
+    """
+    bh, l, p = x.shape
+    n = B.shape[-1]
+
+    def step(S, inp):
+        xt, at, Bt, Ct = inp
+        S = S * jnp.exp(at)[:, None, None] + jnp.einsum(
+            "bn,bp->bnp", Bt, xt)
+        y = jnp.einsum("bn,bnp->bp", Ct, S)
+        return S, y
+
+    S0 = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), S

@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the real
+train/prefill/decode step on the production mesh (16x16 single pod and
+2x16x16 two-pod), and record:
+
+- compiled.memory_analysis()  -> per-device bytes (proves it fits)
+- compiled.cost_analysis()    -> HLO FLOPs / bytes for the roofline
+- collective bytes parsed from the optimized HLO (all-gather,
+  all-reduce, reduce-scatter, all-to-all, collective-permute)
+
+Artifacts land in benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json
+and feed benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--topology]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import ARCHS, get_config
+from repro.models import (cache_axes, count_params, init_cache, params_spec,
+                          prefill, tree_abstract, tree_axes)
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.sharding.rules import DEFAULT_RULES, spec_for_axes, tree_shardings
+from repro.train.optimizer import OptConfig, abstract_state
+from repro.train.step import batch_specs, make_train_step
+from repro.launch.mesh import make_production_mesh, make_topology_mesh
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# input_specs (spec-mandated): ShapeDtypeStruct stand-ins, no allocation
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        b, s = shape.global_batch, shape.seq_len
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+        return out
+    # decode: one token against a cache of seq_len
+    b = shape.global_batch
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, shape.seq_len))
+    return {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention arch: long_500k requires sub-quadratic "
+                "attention (DESIGN.md §4)")
+    return ""
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    rules = dict(DEFAULT_RULES)
+    if shape.name == "long_500k":
+        # batch=1: the data axis is idle for batch sharding; spend it on
+        # sequence-sharding the KV cache (flash-decoding across the pod)
+        rules["kv_seq"] = ("data", "model")
+    return rules
+
+
+def opt_for(cfg: ModelConfig) -> OptConfig:
+    big = count_params(params_spec(cfg)) > 1e11
+    return OptConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+def micro_for(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Gradient-accumulation factor for training cells: the MoE giants
+    need microbatching to fit activations (see EXPERIMENTS.md §Perf)."""
+    if shape.kind != "train":
+        return 1
+    if count_params(params_spec(cfg)) > 1e11:
+        # largest micro count that keeps the batch shardable over data
+        dp = 1
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp = sizes.get("data", 1) * sizes.get("pod", 1)
+        return max(1, min(16, shape.global_batch // dp))
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def _cache_shardings(cfg, cache_ab, rules, mesh):
+    cax = cache_axes(cfg)
+    return {k: NamedSharding(mesh,
+                             spec_for_axes(cax[k], rules, mesh, v.shape))
+            for k, v in cache_ab.items()}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, rules=None):
+    """Lower the cell's step function; returns (lowered, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = rules or rules_for(cfg, shape)
+    spec = params_spec(cfg)
+    params_ab = tree_abstract(spec, cfg.dtype)
+    axes = tree_axes(spec)
+    param_sh = tree_shardings(axes, params_ab, rules, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = opt_for(cfg)
+            opt_ab = abstract_state(opt_cfg, params_ab)
+            step = make_train_step(cfg, opt_cfg, mesh, rules=rules,
+                                   microbatch=micro_for(cfg, shape, mesh))
+            lowered = step.lower(params_ab, opt_ab,
+                                 input_specs(arch, shape_name))
+        elif shape.kind == "prefill":
+            bs = input_specs(arch, shape_name)
+            dp = spec_for_axes(("batch",), rules, mesh,
+                               (shape.global_batch,))
+            in_sh = {k: NamedSharding(
+                mesh, PartitionSpec(*dp, *([None] * (len(v.shape) - 1))))
+                for k, v in bs.items()}
+            fn = jax.jit(
+                lambda p, b: prefill(cfg, p, b),
+                in_shardings=(param_sh, in_sh))
+            lowered = fn.lower(params_ab, bs)
+        else:  # decode
+            ins = input_specs(arch, shape_name)
+            cache_sh = _cache_shardings(cfg, ins["cache"], rules, mesh)
+            from repro.models import decode_step
+            fn = jax.jit(
+                lambda p, c, t, i: decode_step(cfg, p, c, t, i),
+                in_shardings=(param_sh, cache_sh, None, None),
+                donate_argnums=(1,))
+            lowered = fn.lower(params_ab, ins["cache"], ins["tokens"],
+                               ins["pos"])
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "params": count_params(spec),
+            "mesh_shape": list(mesh.devices.shape),
+            "mesh_axes": list(mesh.axis_names)}
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh, out_dir: str,
+             mesh_tag: str) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": mesh_tag, "status": "ok"}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        _write(out_dir, arch, shape_name, rec)
+        return rec
+    try:
+        t0 = time.perf_counter()
+        lowered, meta = lower_cell(arch, shape_name, mesh)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        from repro.launch.hlo_cost import analyze
+        t0 = time.perf_counter()
+        model = analyze(hlo)  # trip-count-scaled per-device costs
+        t_analyze = time.perf_counter() - t0
+        rec.update(meta)
+        rec["time_lower_s"] = round(t_lower, 2)
+        rec["time_compile_s"] = round(t_compile, 2)
+        rec["time_analyze_s"] = round(t_analyze, 2)
+        rec["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes") if hasattr(mem, k)}
+        # raw XLA numbers (undercount while bodies; kept for reference)
+        rec["cost_xla_raw"] = {
+            k: float(v) for k, v in (cost or {}).items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or k == "bytes accessed")}
+        # trip-scaled per-device model (see hlo_cost.py)
+        rec["cost"] = {"flops": model["flops"],
+                       "bytes_hbm": model["bytes_hbm"]}
+        rec["collectives"] = {
+            "bytes": model["collective_bytes"],
+            "counts": model["collective_counts"],
+            "total_bytes": model["collective_total_bytes"]}
+        rec["hlo_lines"] = hlo.count("\n")
+    except Exception as e:  # noqa: BLE001 - record and continue
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    _write(out_dir, arch, shape_name, rec)
+    return rec
+
+
+def _write(out_dir, arch, shape_name, rec):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}.json")
+    slim = {k: v for k, v in rec.items() if k != "trace"}
+    with open(path, "w") as f:
+        json.dump(slim, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--topology", action="store_true",
+                    help="use the paper-mapped device order")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    mesh_tag = ("pod2" if args.multi_pod else "pod1") + (
+        "-topo" if args.topology else "")
+    mesh = (make_topology_mesh(multi_pod=args.multi_pod) if args.topology
+            else make_production_mesh(multi_pod=args.multi_pod))
+    out_dir = args.out or os.path.abspath(
+        os.path.join(ART_DIR, mesh_tag))
+
+    cells = []
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    results = []
+    for a, s in cells:
+        t0 = time.perf_counter()
+        rec = run_cell(a, s, mesh, out_dir, mesh_tag)
+        dt = time.perf_counter() - t0
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            gb = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+            extra = (f" args/dev={gb:.2f}GiB "
+                     f"coll={rec['collectives']['total_bytes']/2**30:.3f}GiB "
+                     f"flops={rec['cost'].get('flops', 0):.3g}")
+        elif status == "error":
+            extra = " " + rec["error"][:120]
+        elif status == "skipped":
+            extra = " (" + rec["reason"][:60] + ")"
+        print(f"[dryrun {mesh_tag}] {a} x {s}: {status} ({dt:.0f}s){extra}",
+              flush=True)
+        results.append(rec)
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    er = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun {mesh_tag}] done: {ok} ok, {sk} skipped, {er} errors")
+    return 1 if er else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,12 @@
+from .config import SHAPES, ModelConfig, ShapeConfig, reduced
+from .decode import cache_axes, cache_spec, decode_step, init_cache, prefill
+from .params import P, count_params, tree_abstract, tree_axes, tree_init
+from .transformer import (forward_hidden, logits_fn, loss_fn, params_spec,
+                          unembed)
+
+__all__ = [
+    "SHAPES", "ModelConfig", "P", "ShapeConfig", "cache_axes", "cache_spec",
+    "count_params", "decode_step", "forward_hidden", "init_cache",
+    "logits_fn", "loss_fn", "params_spec", "prefill", "reduced",
+    "tree_abstract", "tree_axes", "tree_init", "unembed",
+]

@@ -1,0 +1,446 @@
+"""Model layers in pure JAX (functional; params are nested dicts).
+
+Attention comes in three implementations selected by cfg.attn_impl:
+
+- "quadratic": materialises the score matrix — the readable oracle, used
+  for small shapes and as the reference for everything else.
+- "xla_flash": scan over key blocks with an online softmax — memory
+  O(seq * block); the default for training/prefill at scale (and the
+  oracle-validated XLA path the dry-run lowers).
+- "pallas": the TPU kernel in repro.kernels (validated in interpret mode
+  on CPU; selected on real TPU backends).
+
+All attention paths support GQA, causal masking, sliding windows and
+gemma-style logit soft-capping.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import logical
+
+
+# ---------------------------------------------------------------------------
+# Basics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope(x, positions, theta: float):
+    """Rotary embeddings. x: (..., seq, heads, head_dim); positions (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def activation(x, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + causal + sliding window + softcap)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int, dtype):
+    """(q, k) additive bias: 0 where attendable, -inf otherwise."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), dtype=bool)
+    d = q_pos[:, None] - k_pos[None, :]
+    if causal:
+        ok &= d >= 0
+    if window:
+        ok &= d < window
+    return jnp.where(ok, 0.0, -1e30).astype(dtype)
+
+
+def attention_quadratic(q, k, v, *, q_pos, k_pos, causal=True, window=0,
+                        cap=0.0):
+    """Reference attention.  q: (B,S,H,D); k/v: (B,T,KH,D)."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qs = q.reshape(b, s, kh, g, d) * (d ** -0.5)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qs.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    scores = softcap(scores, cap)
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window, scores.dtype)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def attention_xla_flash(q, k, v, *, q_pos, k_pos, causal=True, window=0,
+                        cap=0.0, block: int = 512):
+    """Query-chunked attention in (b, h, ...) layout.
+
+    Perf-iteration 1 (see EXPERIMENTS.md §Perf): the original key-block
+    online-softmax scan carried full-length f32 (b,kh,g,s,d) accumulators
+    through HBM every block step (~30 GB/layer of loop-carry traffic at
+    seq 4096) and its kh*g factored layout blocked clean head sharding
+    (kv_heads < model axis), triggering SPMD full-rematerialisation
+    copies.  This version scans over QUERY chunks instead: per chunk the
+    softmax runs over the full key length in one fused pass, nothing is
+    carried between steps, and everything stays in (b, h, seq, d) layout
+    so `heads` shards 16-way.  k/v are broadcast per query-head group
+    lazily inside each chunk (einsum over the factored kv), keeping kv
+    reads at kv_heads width.  Memory high-water per chunk:
+    O(b * h * block * t) f32 scores.
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    block = min(block, s)
+    nblk = (s + block - 1) // block
+    pad = nblk * block - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=10**9)
+    qc = (q * (d ** -0.5)).astype(q.dtype)
+    qc = qc.reshape(b, nblk, block, h, d)
+    qc = jnp.moveaxis(qc, 1, 0)                       # (nblk,b,block,h,d)
+    qp = q_pos.reshape(nblk, block)
+    # broadcast kv across query-head groups ONCE: g x the (small) kv bytes
+    # buys a unified `h` dim that shards 16-way over the model axis.
+    # kv stays at model dtype (perf iter 5) — the einsum accumulates f32.
+    kf = jnp.repeat(k, g, axis=2)
+    vf = jnp.repeat(v, g, axis=2)
+    kf = logical(kf, ("batch", None, "act_heads", None))
+    vf = logical(vf, ("batch", None, "act_heads", None))
+
+    def chunk(args):
+        qi, qpi = args
+        sc = jnp.einsum("bshd,bthd->bhst", qi, kf,
+                        preferred_element_type=jnp.float32)
+        sc = softcap(sc, cap)
+        sc = sc + _mask_bias(qpi, k_pos, causal, window, sc.dtype)
+        # shard scores over heads when h % model == 0, else fall back to
+        # sharding the query-block dim (minitron h=24 / whisper h=12
+        # cannot split 16 ways; the rules engine drops non-divisible
+        # mappings and picks up the next requested axis — perf iter 5)
+        sc = logical(sc, ("batch", "act_heads", "sp_seq", None))
+        # softmax in f32; store/consume probabilities at model dtype —
+        # halves the p-matrix HBM traffic of the p@v matmul (perf iter 2)
+        p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhst,bthd->bshd", p, vf)
+        return o
+
+    out = jax.lax.map(chunk, (qc, qp))                # (nblk,b,block,h,d)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nblk * block, h, d)
+    if pad:
+        out = out[:, :s]
+    # checkpoint name: with remat="names" the backward keeps this tensor
+    # ((b,s,h,d) sharded over heads — small) instead of re-running the
+    # whole score/softmax pipeline (perf iter 4)
+    from jax.ad_checkpoint import checkpoint_name
+    out = checkpoint_name(out.astype(q.dtype), "attn_out")
+    return out
+
+
+def attention_decode(q, k_cache, v_cache, *, pos, window=0, cap=0.0):
+    """Single-token decode vs a (B,S,KH,D) cache filled up to ``pos``.
+
+    q: (B,1,H,D).  The cache's sequence dim may be sharded ("kv_seq");
+    the softmax reduction then lowers to the flash-decoding style
+    all-reduce pair under SPMD.
+    """
+    b, _, h, d = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qs = (q.reshape(b, kh, g, d) * (d ** -0.5)).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qs, k_cache.astype(jnp.float32))
+    scores = softcap(scores, cap)
+    kpos = jnp.arange(t)
+    valid = kpos[None, :] <= pos[:, None]                  # causal vs fill
+    if window:
+        valid &= kpos[None, :] > pos[:, None] - window
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention(cfg, q, k, v, *, q_pos, k_pos, causal=True, window=0, cap=0.0):
+    impl = cfg.attn_impl
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                      cap=cap)
+    if impl == "quadratic" or q.shape[1] <= 256:
+        return attention_quadratic(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                                   causal=causal, window=window, cap=cap)
+    return attention_xla_flash(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                               causal=causal, window=window, cap=cap)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def attn_block(cfg, p, x, *, positions, window: int = 0, cache=None,
+               cache_pos=None, cross_kv=None, causal=True):
+    """Self- or cross-attention block.
+
+    p: {"q","k","v","o"} projection kernels.
+    window: static sliding-window size (0 = full attention).  Mixed
+        local/global stacks dispatch via lax.cond over two static calls.
+    cache: None (training/prefill without cache) or dict {"k","v"} of
+        (B,S,KH,D) buffers to read/update at cache_pos (decode).
+    cross_kv: (k, v) precomputed encoder projections for cross-attention.
+    Returns (out, new_kv) where new_kv is the (k, v) pair produced by this
+    call (prefill) or the updated cache (decode); None for cross-attn.
+    """
+    b, s, e = x.shape
+    q = jnp.einsum("bse,ehd->bshd", x, p["q"])
+    q = logical(q, ("batch", "act_seq", "act_heads", None))
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = attention(cfg, q, k, v, q_pos=positions,
+                        k_pos=jnp.arange(k.shape[1]), causal=False,
+                        window=0, cap=cfg.attn_softcap)
+        new_kv = None
+    else:
+        k = jnp.einsum("bse,ekd->bskd", x, p["k"])
+        v = jnp.einsum("bse,ekd->bskd", x, p["v"])
+        k = logical(k, ("batch", "act_seq", "act_kv_heads", None))
+        v = logical(v, ("batch", "act_seq", "act_kv_heads", None))
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if cache is None:
+            out = attention(cfg, q, k, v, q_pos=positions, k_pos=positions,
+                            causal=causal, window=window,
+                            cap=cfg.attn_softcap)
+            new_kv = (k, v)
+        else:
+            # decode: write this step's k/v at cache_pos, attend over cache
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+            kc = logical(kc, ("kv_batch", "kv_seq", "act_kv_heads", None))
+            vc = logical(vc, ("kv_batch", "kv_seq", "act_kv_heads", None))
+            pos_vec = jnp.full((b,), cache_pos, jnp.int32)
+            out = attention_decode(q, kc, vc, pos=pos_vec, window=window,
+                                   cap=cfg.attn_softcap)
+            new_kv = {"k": kc, "v": vc}
+    out = jnp.einsum("bshd,hde->bse", out, p["o"])
+    return out, new_kv
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def mlp_block(cfg, p, x):
+    """Gated MLP (llama-style).  p: {"wi","wg","wo"}."""
+    h = jnp.einsum("bse,ef->bsf", x, p["wi"])
+    g = jnp.einsum("bse,ef->bsf", x, p["wg"])
+    h = activation(g, cfg.act) * h
+    h = logical(h, ("batch", "act_seq", "act_mlp"))
+    return jnp.einsum("bsf,fe->bse", h, p["wo"])
+
+
+def moe_block(cfg, p, x):
+    """Top-k token-choice MoE with GROUPED capacity dispatch.
+
+    p: {"router": (E, e), "wi": (X, e, f), "wg": (X, e, f), "wo": (X, f, e)}
+
+    Perf iteration (see EXPERIMENTS.md §Perf grok cell): dispatch is done
+    per token GROUP (leading dim sharded over the data axis) with batched
+    local argsort/scatter/gather, so routing never communicates across
+    data shards — the original flat global sort/scatter forced XLA to
+    all-reduce gather results, which was 67% of grok's collective bytes.
+    FLOP cost stays proportional to *active* experts (tokens * k), which
+    is what MODEL_FLOPS assumes for MoE.
+    """
+    b, s, e = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_tok
+    t = b * s
+    groups = b  # one group per sequence: divides every shape, data-sharded
+    tg = t // groups
+    xt = x.reshape(groups, tg, e)
+    xt = logical(xt, ("batch", None, None))
+    logits = jnp.einsum("gte,Ee->gtE", xt, p["router"].astype(x.dtype))
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topg, tope = jax.lax.top_k(gates, k)                   # (g, tg, k)
+    topg = topg / jnp.maximum(topg.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(tg * k / E * cfg.capacity_factor))
+    flat_e = tope.reshape(groups, tg * k)                  # (g, tg*k)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg), k)[None], (groups, tg * k))
+    flat_g = topg.reshape(groups, tg * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)       # batched: local
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st_ = jnp.take_along_axis(flat_t, order, axis=1)
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+    onehot = jax.nn.one_hot(se, E, dtype=jnp.int32)        # (g, tg*k, E)
+    pos_in_e = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=1) - onehot, se[..., None], axis=2)[..., 0]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, E * cap)   # overflow slot
+    gidx = jnp.broadcast_to(jnp.arange(groups)[:, None], slot.shape)
+    tok = jnp.take_along_axis(
+        xt, st_[..., None], axis=1)                        # (g, tg*k, e)
+    buf = jnp.zeros((groups, E * cap + 1, e), x.dtype).at[
+        gidx, slot].set(tok)
+    buf = buf[:, :E * cap].reshape(groups, E, cap, e)
+    buf = logical(buf, ("batch", "act_experts", None, None))
+    hh = jnp.einsum("gEce,Eef->gEcf", buf, p["wi"])
+    gg = jnp.einsum("gEce,Eef->gEcf", buf, p["wg"])
+    hh = activation(gg, cfg.act) * hh
+    hh = logical(hh, ("batch", "act_experts", None, "act_mlp"))
+    yy = jnp.einsum("gEcf,Efe->gEce", hh, p["wo"]).reshape(
+        groups, E * cap, e)
+    # gather back per group and combine with gate weights
+    picked = jnp.take_along_axis(
+        yy, jnp.clip(slot, 0, E * cap - 1)[..., None], axis=1)
+    contrib = jnp.where(keep[..., None], sg[..., None] * picked, 0.0)
+    out = jnp.zeros((groups, tg, e), x.dtype).at[
+        gidx, st_].add(contrib.astype(x.dtype))
+    return out.reshape(b, s, e)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def ssd_reference(x, dt, A, B, C, *, chunk: int):
+    """Chunked SSD scan (Dao & Gu 2024), pure jnp.
+
+    x : (b, l, h, p)   dt: (b, l, h)   A: (h,) negative decay
+    B : (b, l, n)      C : (b, l, n)
+    returns y: (b, l, h, p) and final state (b, h, p, n)
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    q = chunk
+    nc = l // q
+    assert nc * q == l, (l, q)
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+    a = dtc * A  # (b, nc, q, h) log-decay increments (negative)
+    s_cum = jnp.cumsum(a, axis=2)  # within-chunk cumulative
+    # intra-chunk: L[i,j] = exp(s_i - s_j) for j <= i
+    si = s_cum[:, :, :, None, :]        # (b,nc,q,1,h)
+    sj = s_cum[:, :, None, :, :]        # (b,nc,1,q,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None],
+                     jnp.exp(si - sj), 0.0)  # (b,nc,q,q,h)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b,nc,q,q)
+    scores = cb[..., None] * Lmat * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc)
+    # chunk-final states: S_c = sum_j exp(s_Q - s_j) dt_j B_j x_j
+    decay_out = jnp.exp(s_cum[:, :, -1:, :] - s_cum)   # (b,nc,q,h)
+    dBx = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                     decay_out * dtc, Bc, xc)
+    chunk_decay = jnp.exp(s_cum[:, :, -1, :])          # (b,nc,h)
+
+    def scan_fn(S, inp):
+        dBx_c, dec_c = inp
+        S_new = S * dec_c[..., None, None] + dBx_c
+        return S_new, S  # emit the state *entering* the chunk
+
+    S0 = jnp.zeros((b, h, p, n), jnp.float32)
+    S_last, S_enter = jax.lax.scan(
+        scan_fn, S0,
+        (jnp.moveaxis(dBx.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_decay.astype(jnp.float32), 1, 0)))
+    S_enter = jnp.moveaxis(S_enter, 0, 1)  # (b,nc,h,p,n)
+    # inter-chunk: y_i += C_i . (exp(s_i) * S_enter)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         Cc, S_enter.astype(Cc.dtype),
+                         jnp.exp(s_cum))
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y.astype(x.dtype), S_last
+
+
+def ssd_step(x, dt, A, B, C, state):
+    """Single-token SSD recurrence.  x: (b,h,p); state: (b,h,p,n)."""
+    dA = jnp.exp(dt * A)                        # (b,h)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, B, x)
+    state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C, state.astype(C.dtype))
+    return y.astype(x.dtype), state
+
+
+def _depthwise_conv(seq, w, state=None):
+    """Causal depthwise conv1d.  seq: (b, l, c); w: (width, c).
+
+    state: (b, width-1, c) carried context for decode; returns (out,
+    new_state)."""
+    width = w.shape[0]
+    if state is None:
+        ctx = jnp.pad(seq, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([state.astype(seq.dtype), seq], axis=1)
+    out = sum(ctx[:, i:i + seq.shape[1], :] * w[i] for i in range(width))
+    new_state = ctx[:, -(width - 1):, :] if width > 1 else None
+    return out.astype(seq.dtype), new_state
+
+
+def mamba_block(cfg, p, x, *, cache=None):
+    """Mamba2 block.  p: {"z_proj","x_proj","bc_proj","dt_proj","conv_w",
+    "A_log","D","dt_bias","norm","out_proj"}.
+
+    cache: None for training (full sequence) or {"state": (b,h,hp,n),
+    "conv": (b,w-1,conv_dim)} for single-token decode.
+    Returns (y, new_cache_or_None).
+    """
+    b, l, e = x.shape
+    inner = cfg.ssm_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    z = jnp.einsum("ble,ed->bld", x, p["z_proj"])
+    xin = jnp.einsum("ble,ed->bld", x, p["x_proj"])
+    bc = jnp.einsum("ble,ed->bld", x, p["bc_proj"])
+    dt = jnp.einsum("ble,eh->blh", x, p["dt_proj"])
+    Bc, Cc = bc[..., :n], bc[..., n:]
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _depthwise_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :inner]
+    Bc = conv_out[..., inner:inner + n]
+    Cc = conv_out[..., inner + n:]
+    dt = jax.nn.softplus(dt + p["dt_bias"])                # (b,l,h)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (h,)
+    xh = xin.reshape(b, l, h, hp)
+    if cache is None:
+        y, _ = ssd_reference(xh, dt, A, Bc, Cc, chunk=min(cfg.ssm_chunk, l))
+        new_cache = None
+    else:
+        y, new_state = ssd_step(xh[:, 0], dt[:, 0], A, Bc[:, 0], Cc[:, 0],
+                                cache["state"])
+        y = y[:, None]
+        new_cache = {"state": new_state, "conv": new_conv}
+    y = (y + xh * p["D"][None, None, :, None]).astype(x.dtype)
+    y = y.reshape(b, l, inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bld,de->ble", y, p["out_proj"]).astype(x.dtype)
+    return out, new_cache

@@ -1,0 +1,82 @@
+"""Parameter trees with logical sharding axes (no flax; MaxText pattern).
+
+A model's parameters are declared once as a nested dict of :class:`P`
+specs (shape + logical axis names + init).  From that single declaration
+we derive:
+
+- abstract params (ShapeDtypeStruct) for the dry-run,
+- materialised params for smoke tests / real training,
+- NamedShardings via the logical->mesh rules in repro.sharding.rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple
+    axes: tuple          # logical axis name (or None) per dim
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 0.0    # stddev override (0 -> fan-in)
+    dtype: str = ""       # override model dtype (e.g. "float32" for norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_abstract(spec_tree, dtype: str):
+    """ShapeDtypeStruct tree (used by jax.eval_shape / dry-run)."""
+    def f(p: P):
+        dt = p.dtype or dtype
+        return jax.ShapeDtypeStruct(tuple(int(s) for s in p.shape),
+                                    jnp.dtype(dt))
+    return jax.tree.map(f, spec_tree, is_leaf=is_spec)
+
+
+def tree_axes(spec_tree):
+    """Tree of logical-axis tuples, same structure as the params."""
+    return jax.tree.map(lambda p: tuple(p.axes), spec_tree, is_leaf=is_spec)
+
+
+def tree_init(spec_tree, key, dtype: str):
+    """Materialise parameters (smoke tests and real small-scale training)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for p, k in zip(leaves, keys):
+        dt = jnp.dtype(p.dtype or dtype)
+        shape = tuple(int(s) for s in p.shape)
+        if p.init == "zeros":
+            v = jnp.zeros(shape, dt)
+        elif p.init == "ones":
+            v = jnp.ones(shape, dt)
+        else:
+            if p.scale:
+                std = p.scale
+            elif p.init == "embed":
+                std = 1.0
+            else:
+                fan_in = shape[0] if len(shape) == 1 else int(
+                    np.prod(shape[:-1]))
+                std = 1.0 / math.sqrt(max(fan_in, 1))
+            v = (jax.random.normal(k, shape, jnp.float32) * std).astype(dt)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(np.prod([int(s) for s in p.shape]) for p in leaves))

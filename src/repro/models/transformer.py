@@ -1,0 +1,409 @@
+"""Model assembly: param declarations + forward passes for all families.
+
+Families: dense | moe | ssm (mamba2) | hybrid (zamba2) | encdec (whisper)
+| vlm (internvl).  Layers are stacked and scanned (compile-time O(1) in
+depth); heterogeneous per-layer behaviour (gemma local/global, zamba
+shared-attention sites) dispatches on scanned per-layer flags with
+lax.cond so the scan body stays uniform.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import logical
+
+from . import layers as L
+from .config import ModelConfig
+from .params import P
+
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+# ---------------------------------------------------------------------------
+
+def _attn_spec(cfg: ModelConfig, nl: int, cross: bool = False):
+    e, h, kh, d = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pre = (nl,) if nl else ()
+    lax_ = ("layers",) if nl else ()
+    return {
+        "q": P(pre + (e, h, d), lax_ + ("embed", "heads", "head_dim")),
+        "k": P(pre + (e, kh, d), lax_ + ("embed", "kv_heads", "head_dim")),
+        "v": P(pre + (e, kh, d), lax_ + ("embed", "kv_heads", "head_dim")),
+        "o": P(pre + (h, d, e), lax_ + ("heads", "head_dim", "embed")),
+    }
+
+
+def _mlp_spec(cfg: ModelConfig, nl: int):
+    e, f = cfg.d_model, cfg.d_ff
+    pre = (nl,) if nl else ()
+    lax_ = ("layers",) if nl else ()
+    return {
+        "wi": P(pre + (e, f), lax_ + ("embed", "mlp")),
+        "wg": P(pre + (e, f), lax_ + ("embed", "mlp")),
+        "wo": P(pre + (f, e), lax_ + ("mlp", "embed")),
+    }
+
+
+def _moe_spec(cfg: ModelConfig, nl: int):
+    e, f, x = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": P((nl, x, e), ("layers", "experts", "embed"),
+                    dtype="float32"),
+        "wi": P((nl, x, e, f), ("layers", "experts", "embed", "mlp")),
+        "wg": P((nl, x, e, f), ("layers", "experts", "embed", "mlp")),
+        "wo": P((nl, x, f, e), ("layers", "experts", "mlp", "embed")),
+    }
+
+
+def _mamba_spec(cfg: ModelConfig, nl: int):
+    e = cfg.d_model
+    inner, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = inner + 2 * n
+    return {
+        "z_proj": P((nl, e, inner), ("layers", "embed", "ssm_inner")),
+        "x_proj": P((nl, e, inner), ("layers", "embed", "ssm_inner")),
+        "bc_proj": P((nl, e, 2 * n), ("layers", "embed", None)),
+        "dt_proj": P((nl, e, h), ("layers", "embed", "ssm_heads")),
+        "conv_w": P((nl, cfg.conv_width, conv_dim),
+                    ("layers", "conv", "ssm_inner")),
+        "A_log": P((nl, h), ("layers", "ssm_heads"), init="zeros",
+                   dtype="float32"),
+        "D": P((nl, h), ("layers", "ssm_heads"), init="ones",
+               dtype="float32"),
+        "dt_bias": P((nl, h), ("layers", "ssm_heads"), init="zeros",
+                     dtype="float32"),
+        "norm": P((nl, inner), ("layers", "ssm_inner"), init="zeros",
+                  dtype="float32"),
+        "out_proj": P((nl, inner, e), ("layers", "ssm_inner", "embed")),
+    }
+
+
+def _norm(nl: int, e: int):
+    if nl:
+        return P((nl, e), ("layers", None), init="zeros", dtype="float32")
+    return P((e,), (None,), init="zeros", dtype="float32")
+
+
+def params_spec(cfg: ModelConfig) -> dict:
+    e, v, nl = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    spec: dict = {"tok_embed": P((v, e), ("vocab", "embed"), init="embed")}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        blk = {"ln1": _norm(nl, e), "ln2": _norm(nl, e),
+               "attn": _attn_spec(cfg, nl)}
+        if cfg.family == "moe":
+            blk["moe"] = _moe_spec(cfg, nl)
+        else:
+            blk["mlp"] = _mlp_spec(cfg, nl)
+        spec["layers"] = blk
+    elif cfg.family == "ssm":
+        spec["layers"] = {"ln1": _norm(nl, e),
+                          "mamba": _mamba_spec(cfg, nl)}
+    elif cfg.family == "hybrid":
+        spec["layers"] = {"ln1": _norm(nl, e),
+                          "mamba": _mamba_spec(cfg, nl)}
+        spec["shared_attn"] = {
+            "ln1": _norm(0, e), "ln2": _norm(0, e),
+            "attn": _attn_spec(cfg, 0), "mlp": _mlp_spec(cfg, 0)}
+    elif cfg.family == "encdec":
+        enc = {"ln1": _norm(cfg.encoder_layers, e),
+               "ln2": _norm(cfg.encoder_layers, e),
+               "attn": _attn_spec(cfg, cfg.encoder_layers),
+               "mlp": _mlp_spec(cfg, cfg.encoder_layers)}
+        dec = {"ln1": _norm(nl, e), "ln2": _norm(nl, e), "ln3": _norm(nl, e),
+               "attn": _attn_spec(cfg, nl),
+               "xattn": _attn_spec(cfg, nl, cross=True),
+               "mlp": _mlp_spec(cfg, nl)}
+        spec["encoder"] = enc
+        spec["layers"] = dec
+        spec["enc_final_norm"] = _norm(0, e)
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.frontend:
+        spec["frontend_proj"] = P((cfg.frontend_dim, e),
+                                  ("frontend", "embed"))
+    spec["final_norm"] = _norm(0, e)
+    if not cfg.tie_embeddings:
+        spec["unembed"] = P((e, v), ("embed", "vocab"))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Shared building blocks
+# ---------------------------------------------------------------------------
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "names":
+        # save only named tensors (attention outputs): the backward
+        # recomputes cheap projections/norms but never the score matrix
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out"))
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_saveable)
+    if cfg.remat == "offload_dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=[],
+                offload_src="device", offload_dst="pinned_host"))
+    return jax.checkpoint(fn)
+
+
+def _sp(x):
+    """Megatron-style sequence sharding of the residual stream."""
+    return logical(x, ("batch", "sp_seq", "act_embed"))
+
+
+def _dense_block(cfg, p, x, positions, window, *, cache=None, cache_pos=None):
+    h, kv = L.attn_block(cfg, p["attn"],
+                         L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                         positions=positions, window=window,
+                         cache=cache, cache_pos=cache_pos)
+    x = _sp(x + h)
+    inner = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        x = _sp(x + L.moe_block(cfg, p["moe"], inner))
+    else:
+        x = _sp(x + L.mlp_block(cfg, p["mlp"], inner))
+    return x, kv
+
+
+def _attn_windowed(cfg, p, x, positions, is_global, *, cache=None,
+                   cache_pos=None):
+    """lax.cond dispatch between global and local attention (static
+    windows in both branches; is_global is a traced per-layer flag)."""
+    if cfg.window_size == 0:
+        return _dense_block(cfg, p, x, positions, 0, cache=cache,
+                            cache_pos=cache_pos)
+    if cfg.global_every == 0:  # pure sliding window
+        return _dense_block(cfg, p, x, positions, cfg.window_size,
+                            cache=cache, cache_pos=cache_pos)
+    return jax.lax.cond(
+        is_global > 0,
+        lambda: _dense_block(cfg, p, x, positions, 0, cache=cache,
+                             cache_pos=cache_pos),
+        lambda: _dense_block(cfg, p, x, positions, cfg.window_size,
+                             cache=cache, cache_pos=cache_pos),
+    )
+
+
+def _layer_flags(cfg: ModelConfig) -> np.ndarray:
+    return np.array([1 if cfg.layer_is_global(i) else 0
+                     for i in range(cfg.num_layers)], dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Decoder stacks (training / prefill path: full-sequence, returns kv ys)
+# ---------------------------------------------------------------------------
+
+def _stack_dense(cfg, lp, x, positions, *, collect_kv=False):
+    flags = jnp.asarray(_layer_flags(cfg))
+
+    def body(carry, xs):
+        p, flag = xs
+        y, kv = _attn_windowed(cfg, p, carry, positions, flag)
+        return y, (kv if collect_kv else None)
+
+    body = _remat(cfg, body)
+    if cfg.scan_layers:
+        x, kvs = jax.lax.scan(body, x, (lp, flags))
+    else:
+        kvs = []
+        for i in range(cfg.num_layers):
+            p = jax.tree.map(lambda a: a[i], lp)
+            x, kv = body(x, (p, flags[i]))
+            kvs.append(kv)
+        kvs = (jax.tree.map(lambda *a: jnp.stack(a), *kvs)
+               if collect_kv else None)
+    return x, kvs
+
+
+def _stack_ssm(cfg, lp, x, positions):
+    def body(carry, p):
+        h, _ = L.mamba_block(cfg, p["mamba"],
+                             L.rms_norm(carry, p["ln1"], cfg.norm_eps))
+        return _sp(carry + h), None
+
+    body = _remat(cfg, body)
+    x, _ = jax.lax.scan(body, x, lp)
+    return x, None
+
+
+def _stack_hybrid(cfg, lp, shared, x, positions, *, collect_kv=False):
+    """Zamba2-style: mamba backbone + one shared attention block applied
+    every cfg.attn_every layers (same weights at every site)."""
+    nl = cfg.num_layers
+    idxs = jnp.arange(nl)
+    is_site = jnp.asarray(
+        [(i + 1) % cfg.attn_every == 0 for i in range(nl)], jnp.int32)
+
+    def body(carry, xs):
+        p, site = xs
+        h, _ = L.mamba_block(cfg, p["mamba"],
+                             L.rms_norm(carry, p["ln1"], cfg.norm_eps))
+        x = _sp(carry + h)
+
+        def with_attn(x):
+            y, kv = _dense_block(cfg, shared, x, positions, 0)
+            return y, kv
+
+        if collect_kv:
+            y, kv = with_attn(x)
+            zero_kv = jax.tree.map(jnp.zeros_like, kv)
+            x, kv = jax.lax.cond(site > 0, lambda: (y, kv),
+                                 lambda: (x, zero_kv))
+            return x, kv
+        x = jax.lax.cond(site > 0, lambda: with_attn(x)[0], lambda: x)
+        return x, None
+
+    body = _remat(cfg, body)
+    x, kvs = jax.lax.scan(body, x, (lp, is_site))
+    return x, kvs
+
+
+def _stack_encoder(cfg, lp, x):
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, p):
+        h, _ = L.attn_block(cfg, p["attn"],
+                            L.rms_norm(carry, p["ln1"], cfg.norm_eps),
+                            positions=positions, window=0, causal=False)
+        x = _sp(carry + h)
+        x = _sp(x + L.mlp_block(cfg, p["mlp"],
+                                L.rms_norm(x, p["ln2"], cfg.norm_eps)))
+        return x, None
+
+    body = _remat(cfg, body)
+    x, _ = jax.lax.scan(body, x, lp)
+    return x
+
+
+def _stack_encdec_decoder(cfg, lp, x, positions, enc_out):
+    def body(carry, p):
+        h, _ = L.attn_block(cfg, p["attn"],
+                            L.rms_norm(carry, p["ln1"], cfg.norm_eps),
+                            positions=positions, window=0)
+        x = _sp(carry + h)
+        xk = jnp.einsum("bse,ekd->bskd", enc_out, p["xattn"]["k"])
+        xv = jnp.einsum("bse,ekd->bskd", enc_out, p["xattn"]["v"])
+        h, _ = L.attn_block(cfg, p["xattn"],
+                            L.rms_norm(x, p["ln2"], cfg.norm_eps),
+                            positions=positions, cross_kv=(xk, xv))
+        x = _sp(x + h)
+        x = _sp(x + L.mlp_block(cfg, p["mlp"],
+                                L.rms_norm(x, p["ln3"], cfg.norm_eps)))
+        return x, None
+
+    body = _remat(cfg, body)
+    x, _ = jax.lax.scan(body, x, lp)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg, params, tokens):
+    x = params["tok_embed"][tokens] * (cfg.d_model ** 0.5)
+    return logical(x.astype(cfg.dtype), ("batch", "act_seq", "act_embed"))
+
+
+def unembed(cfg, params, x):
+    w = (params["tok_embed"].T if cfg.tie_embeddings
+         else params["unembed"])
+    logits = jnp.einsum("bse,ev->bsv", x, w)
+    logits = L.softcap(logits, cfg.final_softcap)
+    return logical(logits, ("batch", "act_seq", "act_vocab"))
+
+
+def _ce_loss_chunk(cfg, params, x, labels, mask):
+    logits = unembed(cfg, params, x).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum(), mask.sum()
+
+
+def lm_loss_from_hidden(cfg, params, x, labels, mask):
+    """Cross-entropy with optional sequence chunking (avoids materialising
+    the full (B,S,V) logits for 256k vocabularies)."""
+    b, s, e = x.shape
+    c = cfg.loss_chunk
+    if not c or s <= c or s % c != 0:
+        nll, denom = _ce_loss_chunk(cfg, params, x, labels, mask)
+        return nll / jnp.maximum(denom, 1.0)
+    nchunk = s // c
+
+    def body(carry, inp):
+        xs, ls, ms = inp
+        nll, denom = _ce_loss_chunk(cfg, params, xs, ls, ms)
+        return (carry[0] + nll, carry[1] + denom), None
+
+    xc = x.reshape(b, nchunk, c, e).swapaxes(0, 1)
+    lc = labels.reshape(b, nchunk, c).swapaxes(0, 1)
+    mc = mask.reshape(b, nchunk, c).swapaxes(0, 1)
+    (nll, denom), _ = jax.lax.scan(body, (0.0, 0.0), (xc, lc, mc))
+    return nll / jnp.maximum(denom, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward_hidden(cfg: ModelConfig, params, batch):
+    """Run the backbone to final hidden states (no unembedding)."""
+    if cfg.family == "encdec":
+        frames = batch["frames"]
+        enc_in = jnp.einsum("btf,fe->bte",
+                            frames.astype(cfg.dtype),
+                            params["frontend_proj"])
+        enc = _stack_encoder(cfg, params["encoder"], _sp(enc_in))
+        enc = L.rms_norm(enc, params["enc_final_norm"], cfg.norm_eps)
+        tokens = batch["tokens"]
+        x = embed_tokens(cfg, params, tokens)
+        positions = jnp.arange(tokens.shape[1])
+        x = _stack_encdec_decoder(cfg, params["layers"], x, positions, enc)
+    else:
+        tokens = batch["tokens"]
+        x = embed_tokens(cfg, params, tokens)
+        if cfg.family == "vlm":
+            patches = jnp.einsum("bpf,fe->bpe",
+                                 batch["patches"].astype(cfg.dtype),
+                                 params["frontend_proj"])
+            npatch = patches.shape[1]
+            x = jnp.concatenate([patches, x[:, npatch:]], axis=1)
+            x = logical(x, ("batch", "act_seq", "act_embed"))
+        positions = jnp.arange(tokens.shape[1])
+        if cfg.family in ("dense", "vlm", "moe"):
+            x, _ = _stack_dense(cfg, params["layers"], x, positions)
+        elif cfg.family == "ssm":
+            x, _ = _stack_ssm(cfg, params["layers"], x, positions)
+        elif cfg.family == "hybrid":
+            x, _ = _stack_hybrid(cfg, params["layers"],
+                                 params["shared_attn"], x, positions)
+        else:
+            raise ValueError(cfg.family)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    x = forward_hidden(cfg, params, batch)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    return lm_loss_from_hidden(cfg, params, x, labels,
+                               mask.astype(jnp.float32))
+
+
+def logits_fn(cfg: ModelConfig, params, batch):
+    return unembed(cfg, params, forward_hidden(cfg, params, batch))

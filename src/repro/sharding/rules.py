@@ -1,0 +1,134 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Rules map logical names ("embed", "heads", "vocab", ...) to mesh axes
+("pod", "data", "model").  A mapping is dropped (replicated) when the
+tensor dim is not divisible by the mesh-axis product or when the mesh
+axis was already consumed by an earlier dim of the same tensor — this is
+what lets one rule set serve configs whose kv_heads / experts are smaller
+than the model axis.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+# The baseline parallelism recipe: DP+FSDP over (pod, data); TP/SP/EP over
+# model.  See DESIGN.md §6.
+DEFAULT_RULES: dict = {
+    # --- parameters ---
+    "embed": ("data",),          # FSDP (ZeRO-3) shards the embed dim
+    "embed_no_fsdp": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "layers": (),
+    "conv": (),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_state": (),
+    "frontend": (),
+    # --- activations ---
+    "batch": ("pod", "data"),
+    "act_seq": (),               # attention-region sequence: unsharded
+    "sp_seq": ("model",),        # megatron-SP residual sequence sharding
+    "act_embed": (),
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_experts": ("model",),
+    # --- kv cache / decode ---
+    "kv_batch": ("pod", "data"),
+    "kv_seq": ("model",),        # flash-decoding style seq sharding
+    # --- optimizer ---
+    "opt": (),
+}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for_axes(axes, rules: dict, mesh: Mesh, shape=None) -> PartitionSpec:
+    """PartitionSpec for one tensor's logical axes.
+
+    Drops mappings that don't divide the dim size or reuse a mesh axis.
+    """
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    entries = []
+    for i, name in enumerate(axes):
+        if name is None or name == "":
+            entries.append(None)
+            continue
+        if name not in rules:
+            entries.append(None)
+            continue
+        want = rules[name]
+        if want is None:
+            entries.append(None)
+            continue
+        if isinstance(want, str):
+            want = (want,)
+        chosen = []
+        prod = 1
+        for ax in want:
+            if ax not in sizes or ax in used:
+                continue
+            chosen.append(ax)
+            prod *= sizes[ax]
+        if not chosen:
+            entries.append(None)
+            continue
+        if shape is not None and shape[i] % prod != 0:
+            # try a prefix of the requested axes that divides
+            chosen2 = []
+            prod2 = 1
+            for ax in chosen:
+                if shape[i] % (prod2 * sizes[ax]) == 0:
+                    chosen2.append(ax)
+                    prod2 *= sizes[ax]
+            chosen = chosen2
+        if not chosen:
+            entries.append(None)
+            continue
+        used.update(chosen)
+        entries.append(tuple(chosen) if len(chosen) > 1 else chosen[0])
+    # trim trailing Nones for tidiness
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def tree_shardings(axes_tree, abstract_tree, rules: dict, mesh: Mesh):
+    """NamedSharding tree matching the params tree."""
+    def f(axes, ab):
+        return NamedSharding(mesh,
+                             spec_for_axes(axes, rules, mesh, ab.shape))
+    return jax.tree.map(f, axes_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def logical(x, axes, rules: dict | None = None, mesh: Mesh | None = None):
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    if mesh is None:
+        mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    rules = rules or DEFAULT_RULES
+    spec = spec_for_axes(axes, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return m
+    except Exception:
+        return None

@@ -1,0 +1,147 @@
+"""Training driver: checkpoint/restart, straggler monitoring, elasticity.
+
+The loop is written so that *any* crash (or simulated failure) resumes
+bit-identically: data is a pure function of the step index, checkpoints
+are atomic, and the optimizer state rides along.  Restoring onto a
+different mesh re-shards automatically (see checkpoint.restore).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.models import ModelConfig, params_spec, tree_init
+from repro.sharding.rules import DEFAULT_RULES
+
+from . import checkpoint as ckpt
+from .data import SyntheticLM, make_global_array
+from .optimizer import OptConfig, init_state
+from .step import batch_shardings, make_train_step
+
+
+class StragglerMonitor:
+    """Flags steps (or, fed per-host durations, hosts) that exceed
+    ``threshold`` x the running median — the signal a production job uses
+    to evict/replace slow hosts before they stall the collective."""
+
+    def __init__(self, threshold: float = 2.0, window: int = 50):
+        self.threshold = threshold
+        self.window = window
+        self.durations: list = []
+        self.flagged: list = []
+
+    def add(self, step: int, duration: float):
+        self.durations.append(duration)
+        hist = self.durations[-self.window:]
+        med = float(np.median(hist))
+        if len(hist) >= 5 and duration > self.threshold * med:
+            self.flagged.append((step, duration, med))
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class JobConfig:
+    steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    microbatch: int = 1
+    fail_at_step: int = -1     # simulate a crash (tests)
+    seed: int = 0
+
+
+def train(cfg: ModelConfig, opt_cfg: OptConfig, job: JobConfig, mesh,
+          *, data: SyntheticLM | None = None, shape=None, rules=None,
+          log=print) -> dict:
+    """Run (or resume) a training job.  Returns history dict."""
+    rules = rules or DEFAULT_RULES
+    if data is None:
+        assert shape is not None
+        data = SyntheticLM(cfg.vocab_size, shape.seq_len,
+                           shape.global_batch, seed=job.seed)
+
+    with mesh:
+        step_fn = make_train_step(cfg, opt_cfg, mesh, rules=rules,
+                                  microbatch=job.microbatch)
+        start = 0
+        params = opt_state = None
+        if job.ckpt_dir:
+            last = ckpt.latest_step(job.ckpt_dir)
+            if last is not None:
+                like = {
+                    "params": tree_init(params_spec(cfg),
+                                        jax.random.PRNGKey(job.seed),
+                                        cfg.dtype),
+                    "opt": None,
+                }
+                # build fresh then overwrite (simple; small-model driver)
+                params = tree_init(params_spec(cfg),
+                                   jax.random.PRNGKey(job.seed), cfg.dtype)
+                opt_state = init_state(opt_cfg, params)
+                restored = ckpt.restore(
+                    job.ckpt_dir, last,
+                    {"params": params, "opt": opt_state})
+                params, opt_state = restored["params"], restored["opt"]
+                start = last
+                log(f"[train] resumed from step {last}")
+        if params is None:
+            params = tree_init(params_spec(cfg),
+                               jax.random.PRNGKey(job.seed), cfg.dtype)
+            opt_state = init_state(opt_cfg, params)
+
+        bsh = None
+        if shape is not None:
+            bsh = batch_shardings(cfg, shape, mesh, rules)
+        monitor = StragglerMonitor()
+        history = {"loss": [], "steps": [], "stragglers": monitor.flagged}
+        for step in range(start, job.steps):
+            if step == job.fail_at_step:
+                raise RuntimeError(f"simulated failure at step {step}")
+            np_batch = data.np_batch(step)
+            if bsh is not None:
+                batch = {k: make_global_array(v, bsh[k])
+                         for k, v in np_batch.items() if k in bsh}
+            else:
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in np_batch.items()}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            monitor.add(step, dt)
+            history["loss"].append(loss)
+            history["steps"].append(step)
+            if job.log_every and step % job.log_every == 0:
+                log(f"[train] step {step} loss {loss:.4f} "
+                    f"({dt*1e3:.0f} ms)")
+            if job.ckpt_dir and (step + 1) % job.ckpt_every == 0:
+                ckpt.save(job.ckpt_dir, step + 1,
+                          {"params": params, "opt": opt_state},
+                          keep=job.keep)
+        if job.ckpt_dir:
+            ckpt.save(job.ckpt_dir, job.steps,
+                      {"params": params, "opt": opt_state}, keep=job.keep)
+    history["params"] = params
+    return history
+
+
+def train_with_restarts(cfg, opt_cfg, job: JobConfig, mesh, *,
+                        max_restarts: int = 3, shape=None, log=print):
+    """Supervisor loop: restart from the latest checkpoint on failure —
+    the single-process analogue of a cluster-level job controller."""
+    attempts = 0
+    while True:
+        try:
+            return train(cfg, opt_cfg, job, mesh, shape=shape, log=log)
+        except RuntimeError as e:
+            attempts += 1
+            log(f"[train] failure: {e}; restart {attempts}")
+            if attempts > max_restarts:
+                raise
+            job = dataclasses.replace(job, fail_at_step=-1)

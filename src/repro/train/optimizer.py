@@ -1,0 +1,133 @@
+"""AdamW in pure JAX with sharded state, clipping, schedules, and
+optional int8 gradient compression with error feedback.
+
+Optimizer state shards exactly like the parameters (the moment trees
+inherit the param logical axes), which is what makes ZeRO-style sharding
+fall out of the rules engine for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"   # bfloat16 at grok/mixtral scale
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"        # cosine | constant
+    compress_grads: bool = False    # int8 + error feedback
+
+
+def schedule_lr(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_state(cfg: OptConfig, params) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+    if cfg.compress_grads:
+        state["err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def abstract_state(cfg: OptConfig, abstract_params) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    mk = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    state = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": jax.tree.map(mk, abstract_params),
+        "v": jax.tree.map(mk, abstract_params),
+    }
+    if cfg.compress_grads:
+        state["err"] = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+            abstract_params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _compress_int8(g, err):
+    """Symmetric per-tensor int8 quantisation with error feedback.
+
+    In a multi-pod deployment this runs *before* the cross-DCN gradient
+    all-reduce (8x wire-format reduction on the slowest links); the error
+    buffer re-injects the quantisation residual next step so convergence
+    is unaffected (1-bit-Adam style analysis applies).
+    """
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.abs(g32).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), (g32 - deq)
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.clip_norm else 1.0
+    new_err = state.get("err")
+    if cfg.compress_grads:
+        pairs = jax.tree.map(_compress_int8, grads, state["err"])
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    lr = schedule_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m32 / b1c
+        vh = v32 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    trips = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    first = lambda t: t[0]
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree.map(lambda t: t[0], trips, is_leaf=is3)
+    new_m = jax.tree.map(lambda t: t[1], trips, is_leaf=is3)
+    new_v = jax.tree.map(lambda t: t[2], trips, is_leaf=is3)
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if cfg.compress_grads:
+        new_state["err"] = new_err
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

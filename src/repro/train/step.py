@@ -1,0 +1,141 @@
+"""Train/eval/serve step factories: jit + shardings + donation.
+
+``make_train_step`` returns a jit'd function with in/out shardings
+derived from the logical rules, donated params/optimizer buffers, and
+optional gradient accumulation (microbatching) via lax.scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models import (ModelConfig, cache_axes, cache_spec, decode_step,
+                          loss_fn, params_spec, tree_abstract, tree_axes)
+from repro.sharding.rules import DEFAULT_RULES, spec_for_axes, tree_shardings
+
+from .optimizer import OptConfig, abstract_state, apply_updates
+
+
+def batch_shardings(cfg: ModelConfig, shape, mesh: Mesh,
+                    rules=None) -> dict:
+    rules = rules or DEFAULT_RULES
+    dp = spec_for_axes(("batch",), rules, mesh, (shape.global_batch,))
+    bs = NamedSharding(mesh, PartitionSpec(*dp, None))
+    out = {"tokens": bs, "labels": bs, "mask": bs}
+    if cfg.family == "encdec":
+        out["frames"] = NamedSharding(mesh, PartitionSpec(*dp, None, None))
+    if cfg.family == "vlm":
+        out["patches"] = NamedSharding(mesh, PartitionSpec(*dp, None, None))
+    return out
+
+
+def batch_specs(cfg: ModelConfig, shape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+    return out
+
+
+def model_shardings(cfg: ModelConfig, mesh: Mesh, rules=None):
+    rules = rules or DEFAULT_RULES
+    spec = params_spec(cfg)
+    axes = tree_axes(spec)
+    ab = tree_abstract(spec, cfg.dtype)
+    return tree_shardings(axes, ab, rules, mesh), ab, axes
+
+
+def opt_shardings(opt_cfg: OptConfig, cfg: ModelConfig, mesh: Mesh,
+                  rules=None):
+    rules = rules or DEFAULT_RULES
+    param_sh, ab, axes = model_shardings(cfg, mesh, rules)
+    opt_ab = abstract_state(opt_cfg, ab)
+    rep = NamedSharding(mesh, PartitionSpec())
+    moment_sh = {  # moments shard exactly like params
+        "step": rep,
+        "m": tree_shardings(axes, ab, rules, mesh),
+        "v": tree_shardings(axes, ab, rules, mesh),
+    }
+    if opt_cfg.compress_grads:
+        moment_sh["err"] = tree_shardings(axes, ab, rules, mesh)
+    return moment_sh, opt_ab
+
+
+def _split_micro(batch, n):
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, mesh: Mesh,
+                    *, rules=None, microbatch: int = 1, jit: bool = True):
+    rules = rules or DEFAULT_RULES
+
+    def step_fn(params, opt_state, batch):
+        def loss_of(p, b):
+            return loss_fn(cfg, p, b)
+
+        if microbatch > 1:
+            micro = _split_micro(batch, microbatch)
+
+            def acc(carry, mb):
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (carry[0] + l, jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), carry[1], g)), \
+                    None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(acc, (0.0, zero), micro)
+            loss = loss_sum / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        params2, opt2, metrics = apply_updates(opt_cfg, params, grads,
+                                               opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params2, opt2, metrics
+
+    if not jit:
+        return step_fn
+
+    param_sh, ab, axes = model_shardings(cfg, mesh, rules)
+    opt_sh, _ = opt_shardings(opt_cfg, cfg, mesh, rules)
+    rep = NamedSharding(mesh, PartitionSpec())
+    metrics_sh = {"grad_norm": rep, "lr": rep, "loss": rep}
+    return jax.jit(
+        step_fn,
+        in_shardings=(param_sh, opt_sh, None),
+        out_shardings=(param_sh, opt_sh, metrics_sh),
+        donate_argnums=(0, 1),
+    )
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, *, rules=None,
+                    jit: bool = True):
+    """decode_step wrapped with cache shardings (one-token serving)."""
+    rules = rules or DEFAULT_RULES
+
+    def fn(params, cache, tokens, pos):
+        return decode_step(cfg, params, cache, tokens, pos)
+
+    if not jit:
+        return fn
+    param_sh, ab, axes = model_shardings(cfg, mesh, rules)
+    cax = cache_axes(cfg)
+    return jax.jit(
+        fn,
+        in_shardings=(param_sh, None, None, None),
+        donate_argnums=(1,),
+    )

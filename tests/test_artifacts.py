@@ -1,0 +1,72 @@
+"""Dry-run artifact integrity (deliverable e's acceptance criteria).
+
+Validates the committed artifacts: every (arch x shape) cell exists for
+both production meshes, compiled without error, and carries coherent
+cost/memory/collective records.  Skips cleanly if artifacts were wiped
+(regenerate with `python -m repro.launch.dryrun --all [--multi-pod]`).
+"""
+
+import glob
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                   "artifacts", "dryrun")
+
+EXPECTED_SKIPS = {
+    ("yi_6b", "long_500k"), ("minitron_4b", "long_500k"),
+    ("grok_1_314b", "long_500k"), ("internvl2_26b", "long_500k"),
+    ("whisper_small", "long_500k"),
+}
+
+
+def _cells(tag):
+    files = glob.glob(os.path.join(ART, tag, "*.json"))
+    return {tuple(os.path.basename(f)[:-5].split("__")): json.load(open(f))
+            for f in files}
+
+
+@pytest.mark.parametrize("tag,nchips", [("pod1", 256), ("pod2", 512)])
+def test_dryrun_artifacts_complete(tag, nchips):
+    cells = _cells(tag)
+    if not cells:
+        pytest.skip(f"no artifacts for {tag}; run the dry-run first")
+    assert len(cells) == 40, f"{tag}: expected 40 cells, got {len(cells)}"
+    for (arch, shape), rec in cells.items():
+        if (arch, shape) in EXPECTED_SKIPS:
+            assert rec["status"] == "skipped", (arch, shape)
+            continue
+        assert rec["status"] == "ok", (arch, shape, rec.get("error"))
+        chips = 1
+        for d in rec["mesh_shape"]:
+            chips *= d
+        assert chips == nchips
+        assert rec["cost"]["flops"] > 0
+        assert rec["cost"]["bytes_hbm"] > 0
+        assert rec["memory"]["argument_size_in_bytes"] > 0
+        # params + opt + cache per device must be < v5e HBM
+        assert rec["memory"]["argument_size_in_bytes"] < 16 * 2 ** 30
+
+
+def test_train_cells_have_collectives():
+    cells = _cells("pod1")
+    if not cells:
+        pytest.skip("no artifacts")
+    for (arch, shape), rec in cells.items():
+        if rec["status"] != "ok" or not shape.startswith("train"):
+            continue
+        # a sharded train step without collectives would mean the
+        # sharding silently degenerated to replication
+        assert rec["collectives"]["total_bytes"] > 0, (arch, shape)
+
+
+def test_multipod_uses_pod_axis():
+    cells = _cells("pod2")
+    if not cells:
+        pytest.skip("no artifacts")
+    rec = cells.get(("yi_6b", "train_4k"))
+    assert rec and rec["status"] == "ok"
+    assert rec["mesh_axes"] == ["pod", "data", "model"]
+    assert rec["mesh_shape"] == [2, 16, 16]

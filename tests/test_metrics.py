@@ -1,0 +1,103 @@
+"""Metric (Eqns. 1-7) and routing tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.machine import make_machine, gemini_xk7
+from repro.core.metrics import (Traffic, average_hops, data_metric,
+                                latency_metric, pairwise_hops,
+                                per_dim_stats, route_traffic)
+
+
+def test_hops_mesh_vs_torus():
+    mesh = make_machine((8, 8), wrap=False)
+    torus = make_machine((8, 8), wrap=True)
+    src = np.array([[0, 0]])
+    dst = np.array([[7, 7]])
+    assert pairwise_hops(mesh, src, dst)[0] == 14
+    assert pairwise_hops(torus, src, dst)[0] == 2  # wrap both dims
+
+
+def test_hops_ignores_core_dims():
+    m = make_machine((4, 4, 16), wrap=(True, True, False), core_dims=0)
+    m2 = make_machine((4, 4, 16), wrap=(True, True, False))
+    object.__setattr__(m2, "core_dims", 1)
+    src = np.array([[0, 0, 0]])
+    dst = np.array([[0, 0, 15]])
+    assert pairwise_hops(m, src, dst)[0] == 15
+    assert pairwise_hops(m2, src, dst)[0] == 0
+
+
+def test_route_single_message_mesh():
+    m = make_machine((4, 4), wrap=False)
+    t = route_traffic(m, np.array([[0, 0]]), np.array([[2, 1]]),
+                      np.array([5.0]))
+    # dim 0: + links at (0,0) and (1,0); dim 1: + link at (2,0)
+    assert t.pos[0][0, 0] == 5.0 and t.pos[0][1, 0] == 5.0
+    assert t.pos[0].sum() == 10.0 and t.neg[0].sum() == 0.0
+    assert t.pos[1][2, 0] == 5.0 and t.pos[1].sum() == 5.0
+
+
+def test_route_wraparound_shortest():
+    m = make_machine((8,), wrap=True)
+    t = route_traffic(m, np.array([[7]]), np.array([[1]]), np.array([1.0]))
+    # 7 -> 0 -> 1 forward (2 hops) beats 6 backward hops
+    assert t.pos[0][7] == 1.0 and t.pos[0][0] == 1.0
+    assert t.pos[0].sum() == 2.0 and t.neg[0].sum() == 0.0
+
+
+def test_route_negative_direction():
+    m = make_machine((8,), wrap=False)
+    t = route_traffic(m, np.array([[5]]), np.array([[2]]), np.array([1.0]))
+    # crossing 5->4->3->2 uses - channels at link indices 4, 3, 2
+    assert t.neg[0][4] == 1.0 and t.neg[0][3] == 1.0 and t.neg[0][2] == 1.0
+    assert t.pos[0].sum() == 0.0
+
+
+@given(st.integers(2, 10), st.integers(1, 3), st.integers(1, 30),
+       st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_traffic_conserves_hop_bytes(side, d, nmsg, wrap):
+    """sum(link data) == sum(weight * hops) for any message set."""
+    m = make_machine((side,) * d, wrap=wrap)
+    rng = np.random.default_rng(side * 100 + d * 10 + nmsg)
+    src = rng.integers(0, side, size=(nmsg, d))
+    dst = rng.integers(0, side, size=(nmsg, d))
+    w = rng.uniform(0.5, 2.0, size=nmsg)
+    t = route_traffic(m, src, dst, w)
+    hop_bytes = (pairwise_hops(m, src, dst) * w).sum()
+    assert np.isclose(t.link_data().sum(), hop_bytes)
+
+
+def test_latency_uses_heterogeneous_bandwidth():
+    # dim 0 has bw 10, dim 1 has bw 1: same data -> 10x latency on dim 1
+    m = make_machine((4, 4), wrap=False, bw=(10.0, 1.0))
+    t = route_traffic(m, np.array([[0, 0], [0, 0]]),
+                      np.array([[1, 0], [0, 1]]), np.array([7.0, 7.0]))
+    assert data_metric(t) == 7.0
+    assert latency_metric(t) == 7.0  # bottleneck is the slow dim-1 link
+    stats = per_dim_stats(t)
+    assert stats["dim0+"]["lat_max"] == pytest.approx(0.7)
+    assert stats["dim1+"]["lat_max"] == pytest.approx(7.0)
+
+
+def test_gemini_patterned_bandwidth():
+    m = gemini_xk7(dims=(4, 4, 8), cores_per_node=2)
+    # y links alternate 75 / 37.5
+    assert m.bw(1, 0) == 75.0 and m.bw(1, 1) == 37.5
+    # z backplane within 8, cable at the boundary
+    assert m.bw(2, 0) == 120.0 and m.bw(2, 7) == 75.0
+
+
+def test_average_hops_stencil_identity():
+    """Identity mapping of a grid onto the same grid: every neighbour is
+    one hop."""
+    m = make_machine((8, 8), wrap=False)
+    ix = np.indices((8, 8))
+    coords = np.stack([c.ravel() for c in ix], axis=1)
+    # edges: +x neighbours
+    src = coords[:-8]
+    dst = coords[8:]
+    assert average_hops(m, src, dst) == 1.0

@@ -1,0 +1,69 @@
+"""Appendix A closed-form validation (Eqns. 17-23).
+
+The paper derives the total directed hop count of mapping a 1D task chain
+(td=1) onto a pd=2 grid (the m = pd/td = 2 case of A.3):
+
+  TotalHopsZ = 2^{C+2} - 4*2^{C/2}            (C even)
+               2^{C+2} - 3*2^{(C+1)/2}        (C odd)
+  TotalHopsF = 2^{C+2} - 6*2^{C/2} + 2        (C even)
+               2^{C+2} - 4*2^{(C+1)/2} + 2    (C odd)
+
+where C = log2(#tasks) and hops are counted once per *directed* message
+(each neighbouring pair exchanges two messages).  We check our orderings
+against these exactly; FZ < Z for every C, as the paper concludes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.orderings import grid_order, gray_encode
+
+
+def _chain_total_hops_directed(C: int, order: str) -> int:
+    """Total directed hops of the 1D->2D mapping under Z or FZ."""
+    assert C % 2 == 0, "pd=2 grid needs even C"
+    n = 2 ** C
+    side = 2 ** (C // 2)
+    gp = grid_order((side, side), order)
+    pos = np.zeros((n, 2), dtype=np.int64)
+    ix = np.indices((side, side))
+    pos[gp.ravel()] = np.stack([c.ravel() for c in ix], axis=1)
+    mu = np.arange(n) if order == "Z" else gray_encode(np.arange(n))
+    p = pos[mu]
+    return 2 * int(np.abs(p[1:] - p[:-1]).sum())  # both directions
+
+
+@pytest.mark.parametrize("C", [4, 6, 8, 10])
+def test_total_hops_z_closed_form(C):
+    pred = 2 ** (C + 2) - 4 * 2 ** (C // 2)
+    assert _chain_total_hops_directed(C, "Z") == pred
+
+
+@pytest.mark.parametrize("C", [4, 6, 8, 10])
+def test_total_hops_fz_closed_form(C):
+    pred = 2 ** (C + 2) - 6 * 2 ** (C // 2) + 2
+    assert _chain_total_hops_directed(C, "FZ") == pred
+
+
+@pytest.mark.parametrize("C", [4, 6, 8, 10])
+def test_fz_beats_z(C):
+    assert (_chain_total_hops_directed(C, "FZ")
+            < _chain_total_hops_directed(C, "Z"))
+
+
+def test_nhf_single_dimension_property():
+    """App. A.2: FZ neighbours differ in one Gray bit => hops along only a
+    single processor dimension (pd=td case: always exactly 1 hop)."""
+    side, d = 8, 2
+    n = side ** d
+    gt = grid_order((side,) * d, "FZ")
+    pos = np.zeros((n, d), dtype=np.int64)
+    ix = np.indices((side,) * d)
+    pos[gt.ravel()] = np.stack([c.ravel() for c in ix], axis=1)
+    # pd == td: identical partitions -> every task sits on "its" node and
+    # task neighbours are node neighbours (NHZ == NHF == 1)
+    tpos = pos[gt]
+    for k in range(d):
+        a = np.moveaxis(tpos, k, 0)
+        dist = np.abs(a[1:] - a[:-1]).sum(axis=-1)
+        assert (dist == 1).all()
