@@ -13,6 +13,8 @@ transforms (Fig. 7) and optionally the "+E" architecture optimisation
 (drop the E dim from node coords so E-neighbour pairs stay together).
 
 Wall-clock is not measurable here; we report the paper's §3 metrics.
+Z2 variants run through the unified ``repro.mapping`` pipeline via
+``repro.core.Mapper``.
 Findings to match: per-dim Data — SFC overloads D/E links and starves
 A/B/C; Z2 balances them and cuts max Data; improvements grow with rank
 count (8K -> 32K).

@@ -13,7 +13,8 @@ Findings to match (Figs. 10-12): Z2_1 HURTS (splits nodes); Z2_2 ~
 matches SFC; Z2_3 cuts Latency(M) (up to ~18% at 86,400 ranks in the
 paper) while RAISING WeightedHops ~25% — the bandwidth-aware trade.
 Per-dim: SFC's worst latency sits on the slow Y cables; Z2_3 moves
-traffic to fast X/Z links.
+traffic to fast X/Z links.  Z2 variants run through the unified
+``repro.mapping`` pipeline via ``repro.core.Mapper``.
 """
 
 from __future__ import annotations

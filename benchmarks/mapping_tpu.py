@@ -15,7 +15,11 @@ Scenarios (the TPU analogue of the paper's §5 experiments):
 The mapper uses the framework's candidate selection (default + FZ
 mappings x coordinate scalings x rotations, scored by Latency(M)) —
 exactly the paper's §4.3 rotation-search methodology — so it is never
-worse than the default enumeration.
+worse than the default enumeration.  All candidate generation and
+scoring run through the unified ``repro.mapping`` pipeline
+(``select_mapping`` is a thin adapter): the vectorised Multi-Jagged
+partitioner orders both sides and one batched metrics pass ranks every
+candidate.
 """
 
 from __future__ import annotations

@@ -14,6 +14,10 @@ We report AverageHops and Latency(M) (Eqn. 7).  The paper's findings to
 match: Default's hops/latency GROW with core count; Z2_1/Z2_2 stay ~flat
 (the scalability claim); Z2_3 trades higher hops for lower bottleneck
 Latency; geometric mappings beat Default by large factors at 128K.
+
+All Z2 variants run through ``repro.core.Mapper`` -> the unified
+``repro.mapping`` pipeline (vectorised partitioner + shared candidate
+search).
 """
 
 from __future__ import annotations

@@ -2,6 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV lines (one per benchmark).
 
+  partition        : vectorised vs recursive Multi-Jagged engine
+                     (order_points at 2^18 points / 4096 parts) with a
+                     bit-identity check and a speedup smoke guard
   table1_orderings : paper Table 1  (AverageHops of H/Z/FZ/MFZ)
   minighost        : paper Figs. 13-15 (weak scaling, sparse Gemini)
   homme_bgq        : paper Table 2 + Figs. 8-9 (BG/Q 5D torus)
@@ -38,6 +41,50 @@ def main() -> None:
 
     from benchmarks import (homme_bgq, homme_titan, mapping_tpu, minighost,
                             roofline, table1_orderings)
+
+    def partition_bench():
+        """Vectorised level-synchronous engine vs recursive reference.
+
+        Demonstrates the engine-swap speedup at the ISSUE's pinned size
+        (2^18 points / 4096 parts) across task dimensionalities, checks
+        the two backends stay bit-identical, and acts as a smoke guard:
+        if the vectorised engine ever regresses below the floor the
+        harness exits nonzero.
+        """
+        import numpy as np
+
+        from repro.core.orderings import order_points, order_points_recursive
+
+        n, parts = 1 << 18, 4096
+        floor = 10.0 if args.full else 4.0
+        fields = []
+        best = 0.0
+        t_best = 0.0
+        for d in (1, 2, 3):
+            coords = np.random.default_rng(1).normal(size=(n, d))
+            order_points(coords[:4096], 64, "FZ")  # warm the engine path
+            tv = min(_time_once(order_points, coords, parts)
+                     for _ in range(2))
+            t0 = time.perf_counter()
+            mu_ref = order_points_recursive(coords, parts, "FZ")
+            tr = time.perf_counter() - t0
+            assert np.array_equal(
+                order_points(coords, parts, "FZ"), mu_ref), \
+                f"backends disagree at d={d}"
+            speed = tr / max(tv, 1e-9)
+            if speed > best:
+                best, t_best = speed, tv
+            fields.append(f"d{d}_speedup={speed:.1f}x")
+        print(f"partition,{t_best*1e6:.0f},n={n};parts={parts};"
+              + ";".join(fields) + f";best={best:.1f}x")
+        assert best >= floor, (
+            f"vectorised partitioner speedup {best:.1f}x below the "
+            f"{floor:.0f}x smoke floor")
+
+    def _time_once(fn, coords, parts):
+        t0 = time.perf_counter()
+        fn(coords, parts, "FZ")
+        return time.perf_counter() - t0
 
     def table1():
         if args.full:
@@ -91,6 +138,7 @@ def main() -> None:
                   f";z2_2_lat_vs_sfc={z['Latency']:.3f}")
 
     benches = {
+        "partition": partition_bench,
         "table1_orderings": table1,
         "minighost": mini,
         "homme_bgq": bgq,

@@ -1,10 +1,17 @@
 """Task mapping via consistent geometric ordering (paper §4, Alg. 1).
 
 ``geometric_map`` is Algorithm 1: order task coordinates and processor
-coordinates with the same Multi-Jagged recursion (+SFC part numbering) and
-match equal part numbers.  ``Mapper`` wraps the full Z2 pipeline with the
-paper's transforms (shift, bandwidth scaling, box lift, +E, rotation
-search) so applications and the JAX mesh builder call one entry point.
+coordinates with the same Multi-Jagged recursion (+SFC part numbering)
+and match equal part numbers.  ``Mapper`` wraps the full Z2 pipeline
+(shift, bandwidth scaling, box lift, +E, rotation search).
+
+Both are thin adapters over :mod:`repro.mapping` — the unified mapping
+pipeline whose stages (machine transforms -> partitioner backend ->
+part matching -> batched candidate scoring) are shared with the JAX
+mesh builder (:mod:`repro.meshmap.device_mesh`) and every benchmark, so
+the rotation/candidate-search loop exists exactly once in the repo.
+This module hosts the result/matching primitives; the pipeline imports
+them (never the other way around), keeping the import graph acyclic.
 """
 
 from __future__ import annotations
@@ -14,12 +21,8 @@ import dataclasses
 import numpy as np
 
 from . import metrics as M
-from .kmeans import closest_subset
-from .machine import Allocation, Machine
-from .orderings import order_points
+from .machine import Allocation
 from .taskgraph import TaskGraph
-from .transforms import (apply_permutation, box_lift, drop_dims,
-                         permutations, scale_by_bandwidth, shift_torus)
 
 
 @dataclasses.dataclass
@@ -29,7 +32,7 @@ class MappingResult:
     For tnum > pnum several tasks share a processor.  ``proc_to_tasks`` is
     a list of task-index arrays per processor.  ``rotation`` records the
     winning (task_perm, proc_perm) of the rotation search; ``score`` its
-    WeightedHops.
+    objective value (WeightedHops for the classic search).
     """
 
     task_to_proc: np.ndarray
@@ -43,7 +46,7 @@ class MappingResult:
         return [np.array(x, dtype=np.int64) for x in out]
 
 
-def _match_parts(mu_task: np.ndarray, mu_proc: np.ndarray) -> np.ndarray:
+def match_parts(mu_task: np.ndarray, mu_proc: np.ndarray) -> np.ndarray:
     """task_to_proc from equal part numbers (paper GETMAPPINGARRAYS).
 
     When several tasks share a part (tnum > pnum) they all map to the
@@ -60,6 +63,9 @@ def _match_parts(mu_task: np.ndarray, mu_proc: np.ndarray) -> np.ndarray:
     return part_to_proc[mu_task]
 
 
+_match_parts = match_parts  # backwards-compatible alias
+
+
 def geometric_map(
     task_coords: np.ndarray,
     proc_coords: np.ndarray,
@@ -71,40 +77,16 @@ def geometric_map(
     task_weights: np.ndarray | None = None,
     task_perm=None,
     proc_perm=None,
+    backend: str = "vectorized",
 ) -> MappingResult:
     """Paper Algorithm 1 for one (task_perm, proc_perm) rotation."""
-    tc = np.asarray(task_coords, dtype=np.float64)
-    pc = np.asarray(proc_coords, dtype=np.float64)
-    if task_perm is not None:
-        tc = apply_permutation(tc, task_perm)
-    if proc_perm is not None:
-        pc = apply_permutation(pc, proc_perm)
-    tnum, td = tc.shape
-    pnum, pd = pc.shape
-
-    subset = None
-    if tnum < pnum:
-        subset = closest_subset(pc, tnum)
-        pc = pc[subset]
-        pnum = tnum
-    np_parts = min(tnum, pnum)
-
-    task_sfc = proc_sfc = sfc
-    use_mfz = (mfz is True) or (
-        mfz == "auto" and sfc == "FZ" and pd != td and pd % max(td, 1) == 0)
-    if use_mfz:
-        task_sfc = "FZlow"  # MFZ: flip the LOW half on the smaller-dim side
-        proc_sfc = "FZ"
-
-    mu_t = order_points(tc, np_parts, task_sfc, weights=task_weights,
-                        longest_dim=longest_dim, uneven_prime=uneven_prime)
-    mu_p = order_points(pc, np_parts, proc_sfc, longest_dim=longest_dim,
-                        uneven_prime=uneven_prime)
-    t2p = _match_parts(mu_t, mu_p)
-    if subset is not None:
-        t2p = subset[t2p]
-    return MappingResult(t2p, rotation=(tuple(task_perm or ()),
-                                        tuple(proc_perm or ())))
+    from repro.mapping.pipeline import MappingPipeline, PipelineConfig
+    pipe = MappingPipeline(PipelineConfig(
+        sfc=sfc, mfz=mfz, longest_dim=longest_dim,
+        uneven_prime=uneven_prime, backend=backend))
+    return pipe.map_candidate(task_coords, proc_coords,
+                              task_weights=task_weights,
+                              task_perm=task_perm, proc_perm=proc_perm)
 
 
 # ---------------------------------------------------------------------------
@@ -127,6 +109,7 @@ class MapperConfig:
                      the best WeightedHops (paper's rotation search).
     uneven_prime   : Z2_2 — largest-prime-divisor uneven bisection.
     longest_dim    : cut the longest dimension (False = strict alternation).
+    backend        : partitioner engine ("vectorized" or "recursive").
     """
 
     sfc: str = "FZ"
@@ -139,78 +122,30 @@ class MapperConfig:
     rotations: int = 0
     uneven_prime: bool = False
     longest_dim: bool = True
+    backend: str = "vectorized"
 
 
 class Mapper:
-    """Maps a TaskGraph onto an Allocation (the paper's Z2)."""
+    """Maps a TaskGraph onto an Allocation (the paper's Z2).
+
+    Delegates to :class:`repro.mapping.MappingPipeline` with the
+    paper's objective (WeightedHops) — kept as the stable public API.
+    """
 
     def __init__(self, config: MapperConfig | None = None):
+        from repro.mapping.pipeline import MappingPipeline, PipelineConfig
         self.config = config or MapperConfig()
+        self.pipeline = MappingPipeline(PipelineConfig(
+            objective="weighted_hops",
+            **dataclasses.asdict(self.config)))
 
     def machine_coords(self, alloc: Allocation) -> np.ndarray:
-        """Apply the machine-side transforms of the pipeline.
-
-        Core dims are dropped first: every core of a node carries its
-        ROUTER's coordinates (paper §2 — coordinates come from the
-        router; intra-node communication is free).  MJ then keeps a
-        node's cores in consecutive parts automatically (equal
-        coordinates are never separated before everything else is cut).
-        """
-        cfg = self.config
-        machine = alloc.machine
-        coords = alloc.coords.astype(np.float64)
-        if machine.core_dims:
-            nd = machine.ndim - machine.core_dims
-            coords = coords[:, :nd]
-        if cfg.shift:
-            coords = shift_torus(coords, machine)
-        if cfg.bandwidth_scale:
-            coords = scale_by_bandwidth(coords, machine)
-        if cfg.drop:
-            coords = drop_dims(coords, cfg.drop)
-        if cfg.box is not None:
-            nd = coords.shape[1]
-            box = tuple(cfg.box) + (1,) * (nd - len(cfg.box))
-            coords = box_lift(coords, box, outer_weight=cfg.box_outer_weight)
-        return coords
+        """Machine-side transform stage (see MappingPipeline)."""
+        return self.pipeline.machine_coords(alloc)
 
     def map(self, graph: TaskGraph, alloc: Allocation,
             task_coords: np.ndarray | None = None) -> MappingResult:
-        cfg = self.config
-        pc = self.machine_coords(alloc)
-        tc = np.asarray(task_coords if task_coords is not None
-                        else graph.coords, dtype=np.float64)
-        combos = [(None, None)]
-        if cfg.rotations:
-            tperms = permutations(tc.shape[1])
-            pperms = permutations(pc.shape[1])
-            combos = [(a, b) for a in tperms for b in pperms]
-            if len(combos) > cfg.rotations:
-                sel = np.linspace(0, len(combos) - 1,
-                                  cfg.rotations).astype(int)
-                combos = [combos[i] for i in sel]
-        best = None
-        for tp, pp in combos:
-            res = geometric_map(
-                tc, pc, sfc=cfg.sfc, mfz=cfg.mfz,
-                longest_dim=cfg.longest_dim, uneven_prime=cfg.uneven_prime,
-                task_perm=tp, proc_perm=pp)
-            if len(combos) == 1:
-                res.score = float("nan")
-                return res
-            score = self._weighted_hops(graph, alloc, res)
-            if best is None or score < best.score:
-                res.score = score
-                best = res
-        return best
-
-    @staticmethod
-    def _weighted_hops(graph: TaskGraph, alloc: Allocation,
-                       res: MappingResult) -> float:
-        coords = alloc.coords[res.task_to_proc]
-        src = coords[graph.edges[:, 0]]
-        dst = coords[graph.edges[:, 1]]
-        return M.weighted_hops(alloc.machine, src, dst, graph.weights)
+        return self.pipeline.map(graph, alloc, task_coords=task_coords)
 
 
 def evaluate(graph: TaskGraph, alloc: Allocation, res: MappingResult) -> dict:

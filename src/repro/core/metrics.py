@@ -25,14 +25,19 @@ from .machine import Machine
 
 def pairwise_hops(machine: Machine, src: np.ndarray, dst: np.ndarray
                   ) -> np.ndarray:
-    """Shortest-path hop count between coordinate rows (per message)."""
+    """Shortest-path hop count between coordinate rows (per message).
+
+    ``src``/``dst`` may carry leading batch dimensions (``(..., E, nd)``)
+    — the candidate-search engine scores whole candidate stacks in one
+    call; the result has shape ``src.shape[:-1]``.
+    """
     src = np.asarray(src)
     dst = np.asarray(dst)
     nd = machine.ndim - machine.core_dims
-    total = np.zeros(len(src), dtype=np.int64)
+    total = np.zeros(src.shape[:-1], dtype=np.int64)
     for k in range(nd):
         s = machine.dims[k]
-        d = np.abs(src[:, k] - dst[:, k])
+        d = np.abs(src[..., k] - dst[..., k])
         if machine.wrap[k]:
             d = np.minimum(d, s - d)
         total += d
@@ -99,22 +104,42 @@ def route_traffic(machine: Machine, src: np.ndarray, dst: np.ndarray,
     """Accumulate per-link traffic for messages src->dst (dim-ordered)."""
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
-    nmsg = len(src)
+    pos, neg = _batched_route(machine, src[None], dst[None], weights)
+    return Traffic(machine, [p[0] for p in pos], [p[0] for p in neg])
+
+
+def _batched_route(machine: Machine, src: np.ndarray, dst: np.ndarray,
+                   weights: np.ndarray | None = None):
+    """Dimension-ordered routing for a whole STACK of mappings at once.
+
+    ``src``/``dst``: (B, E, ndim) integer coordinates — one candidate
+    mapping per leading index.  Returns ``(pos, neg)``: per network dim,
+    a ``(B, *machine.dims)`` array of directed link loads.  The batch is
+    folded into the row index of the shared difference-array range-add,
+    so scoring B candidates costs one vectorised pass instead of B
+    python-level routing loops (the mapping pipeline's candidate search
+    relies on this).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    nb, nmsg, _ = src.shape
     if weights is None:
-        weights = np.ones(nmsg)
-    w = np.asarray(weights, dtype=np.float64)
+        w = np.ones(nb * nmsg)
+    else:
+        w = np.broadcast_to(np.asarray(weights, dtype=np.float64),
+                            (nb, nmsg)).reshape(-1)
     nd = machine.ndim - machine.core_dims
     dims = machine.dims
 
-    pos = [np.zeros(dims) for _ in range(nd)]
-    neg = [np.zeros(dims) for _ in range(nd)]
+    pos = [np.zeros((nb,) + dims) for _ in range(nd)]
+    neg = [np.zeros((nb,) + dims) for _ in range(nd)]
 
     # current position starts at src; after routing dim k it holds dst[:k+1]
     cur = src.copy()
     for k in range(nd):
         s = dims[k]
-        a = cur[:, k]
-        b = dst[:, k]
+        a = cur[..., k].reshape(-1)
+        b = dst[..., k].reshape(-1)
         if machine.wrap[k]:
             fwd = (b - a) % s
             bwd = (a - b) % s
@@ -126,33 +151,35 @@ def route_traffic(machine: Machine, src: np.ndarray, dst: np.ndarray,
             length_f = np.where(use_fwd, b - a, 0)
             length_b = np.where(use_fwd, 0, a - b)
 
-        # rows: all machine dims fixed except k. Row coordinate is `cur`
-        # with dim k removed.  (Core dims stay at the src's core coords —
-        # they are free, routing order irrelevant.)
-        other = [cur[:, j] for j in range(machine.ndim) if j != k]
+        # rows: all machine dims fixed except k, plus the candidate index
+        # as the leading coordinate.  (Core dims stay at the src's core
+        # coords — they are free, routing order irrelevant.)
+        other = [cur[..., j].reshape(-1)
+                 for j in range(machine.ndim) if j != k]
         row_dims = tuple(d for j, d in enumerate(dims) if j != k)
         if row_dims:
             row = np.ravel_multi_index(other, row_dims)
         else:
-            row = np.zeros(nmsg, dtype=np.int64)
+            row = np.zeros(nb * nmsg, dtype=np.int64)
         nrows = int(np.prod(row_dims)) if row_dims else 1
+        row = row + np.repeat(np.arange(nb, dtype=np.int64) * nrows, nmsg)
 
         # + direction: links a, a+1, ..., a+len-1 (mod s)
-        _accumulate_circular(pos[k], row, nrows, s, a, length_f, w,
+        _accumulate_circular(pos[k], row, nb * nrows, s, a, length_f, w,
                              dims, k)
         # - direction: crossing from a down by len uses - channels at
         # indices (a-1, a-2, ..., a-len) mod s == start (a-len) length len
         start_b = (a - length_b) % s if machine.wrap[k] else a - length_b
-        _accumulate_circular(neg[k], row, nrows, s, start_b, length_b, w,
-                             dims, k)
+        _accumulate_circular(neg[k], row, nb * nrows, s, start_b, length_b,
+                             w, dims, k)
         cur = cur.copy()
-        cur[:, k] = b
-    return Traffic(machine, pos, neg)
+        cur[..., k] = dst[..., k]
+    return pos, neg
 
 
 def _accumulate_circular(out, row, nrows, s, start, length, w, dims, k):
     """Range-add ``w`` to circular intervals [start, start+length) of each
-    row's 1D link array, writing into ``out`` (full machine shape)."""
+    row's 1D link array, writing into ``out`` ((B,) + machine shape)."""
     m = length > 0
     if not m.any():
         return
@@ -173,10 +200,78 @@ def _accumulate_circular(out, row, nrows, s, start, length, w, dims, k):
         np.add.at(diff, (row[wr], end[wr] - s), -ww[wr])
         np.add.at(diff, (row[wr], np.full(wr.sum(), s)), -ww[wr])
     lane = np.cumsum(diff[:, :s], axis=1)
-    # scatter back into the machine-shaped array: move axis k last
+    # scatter back into the batched machine-shaped array: axis k of the
+    # machine sits at position k+1 of ``out``
     shape_rows = tuple(d for j, d in enumerate(dims) if j != k)
-    lane = lane.reshape(shape_rows + (s,)) if shape_rows else lane.reshape(s)
-    out += np.moveaxis(lane, -1, k)
+    lane = lane.reshape((len(out),) + shape_rows + (s,))
+    out += np.moveaxis(lane, -1, k + 1)
+
+
+# ---------------------------------------------------------------------------
+# Batched candidate evaluation (the mapping pipeline's scoring engine)
+# ---------------------------------------------------------------------------
+
+def evaluate_candidates(machine: Machine, task_edges: np.ndarray,
+                        edge_weights: np.ndarray | None,
+                        coord_stack: np.ndarray, *,
+                        traffic: bool = False,
+                        chunk_elems: int = 1 << 24) -> dict:
+    """Score a stack of candidate mappings in vectorised passes.
+
+    ``coord_stack``: (B, ntasks, ndim) — machine coordinate of every task
+    under each of B candidate mappings.  Returns a dict of (B,) arrays:
+    ``weighted_hops``, ``total_hops``, ``average_hops`` and — when
+    ``traffic`` is requested — ``data_max`` / ``latency_max`` from the
+    batched dimension-ordered router.  Candidates are processed in
+    chunks bounded by ``chunk_elems`` message-coordinates so arbitrarily
+    large candidate sets cannot blow up memory.
+    """
+    coord_stack = np.asarray(coord_stack)
+    nb = len(coord_stack)
+    ne = len(task_edges)
+    w = np.ones(ne) if edge_weights is None else \
+        np.asarray(edge_weights, dtype=np.float64)
+    out = {
+        "weighted_hops": np.empty(nb),
+        "total_hops": np.empty(nb, dtype=np.int64),
+        "average_hops": np.empty(nb),
+    }
+    if traffic:
+        out["data_max"] = np.empty(nb)
+        out["latency_max"] = np.empty(nb)
+    nd = machine.ndim - machine.core_dims
+    per_cand = max(ne * machine.ndim, 1)
+    if traffic:
+        per_cand += 2 * nd * machine.nnodes
+    chunk = int(max(1, chunk_elems // per_cand))
+    for c0 in range(0, nb, chunk):
+        cs = coord_stack[c0:c0 + chunk]
+        src = cs[:, task_edges[:, 0]]
+        dst = cs[:, task_edges[:, 1]]
+        h = pairwise_hops(machine, src, dst)  # (chunk, E)
+        sl = slice(c0, c0 + len(cs))
+        out["weighted_hops"][sl] = (h * w).sum(axis=-1)
+        out["total_hops"][sl] = h.sum(axis=-1)
+        out["average_hops"][sl] = h.mean(axis=-1) if ne else 0.0
+        if traffic:
+            pos, neg = _batched_route(machine, src.astype(np.int64),
+                                      dst.astype(np.int64), w)
+            b = len(cs)
+            data = np.zeros(b)
+            lat = np.zeros(b)
+            for k in range(nd):
+                idx = np.arange(machine.dims[k])
+                bw = np.asarray(machine.bw(k, idx), dtype=np.float64)
+                shape = [1] * (machine.ndim + 1)
+                shape[k + 1] = machine.dims[k]
+                bw_full = bw.reshape(shape)
+                for arr in (pos[k], neg[k]):
+                    data = np.maximum(data, arr.reshape(b, -1).max(axis=1))
+                    lat = np.maximum(
+                        lat, (arr / bw_full).reshape(b, -1).max(axis=1))
+            out["data_max"][sl] = data
+            out["latency_max"][sl] = lat
+    return out
 
 
 # ---------------------------------------------------------------------------

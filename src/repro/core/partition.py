@@ -1,0 +1,495 @@
+"""Level-synchronous vectorised Multi-Jagged partitioning engine.
+
+The reference implementation of paper Algorithm 2
+(:func:`repro.core.orderings.order_points_recursive`) recurses part by
+part in Python: every one of the ~``2*nparts`` recursion nodes pays a
+Python call, a fancy-index gather, an ``argsort`` and a ``cumsum``.  At
+Table-1 scale (2^18+ points, thousands of parts) the interpreter
+overhead dominates and the partitioner runs orders of magnitude below
+NumPy speed.
+
+This module replaces the recursion with *level-synchronous* sweeps that
+cut every active part of one recursion level simultaneously.  Two
+engines implement the sweep; both return part numbers **bit-identical**
+to the recursive reference (cross-checked in tests/test_partition.py):
+
+``_fast_order`` (primary)
+    Sorts each coordinate dimension ONCE up front, then maintains, for
+    every dimension, a permutation in which each active segment
+    (= recursion node) occupies one contiguous, value-sorted block.
+    A level then needs no sorting at all: cut positions come from
+    segmented weight prefix sums over the presorted blocks, and the
+    splits are applied to every dimension's permutation with O(n)
+    vectorised *stable partitions* (one cumsum + one scatter per dim).
+    Coordinate flips (FZ / FZlow / Gray) are never materialised — a
+    flip only negates one dimension of one segment, so it is tracked as
+    a per-(segment, dim) sign and handled by walking the presorted
+    block from the other end.  Segment extents are sign-invariant
+    (``max(s*x) - min(s*x) == max(x) - min(x)`` exactly in IEEE
+    arithmetic), so longest-dimension selection reads only the block
+    ends of each presorted permutation.
+
+    The one thing presorted permutations cannot reproduce is the
+    reference's *evolving* tie order: ``argsort(kind="stable")`` inside
+    the recursion breaks equal coordinates by the order the previous
+    levels produced, while the presorted blocks keep the original-index
+    order.  Tie order is observable only when a tie group straddles a
+    cut boundary (the cut then splits equal points by current order) or
+    when float weights are summed across a tie group (different
+    summation order, different rounding).  Both situations are detected
+    exactly — O(#segments) boundary comparisons per level — and the
+    engine restarts on the exact fallback below.  Power-of-two grids,
+    distinct coordinates (any weights), and every paper benchmark stay
+    on the fast path.
+
+``_exact_order`` (fallback)
+    One segmented ``np.lexsort`` per level keyed by ``(segment,
+    coordinate)`` — the stability-preserving equivalent of the per-part
+    stable ``argsort`` — with materialised coordinate flips.  Handles
+    arbitrary tie structure; ~an order of magnitude slower than the
+    fast engine but still free of per-part Python overhead.
+
+Total fast-path work is O(d * n log n) for the initial sorts plus
+O(levels * n * d) for the sweeps; ``order_points`` through this engine
+is >=10x faster than the recursion at 2^18 points / 4096 parts (see the
+``partition`` entry of ``benchmarks/run.py``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["vectorized_order"]
+
+
+# Ceiling for the padded per-segment cumsum buffer (entries).  Above it
+# weighted cuts fall back to the recursive-equivalent exact path with a
+# per-segment loop (huge, pathologically unbalanced inputs only).
+_PAD_CAP = 1 << 26
+
+
+class _TieFallback(Exception):
+    """Fast path detected a cut whose result depends on evolving tie
+    order (or an oversized weighted buffer); restart on _exact_order."""
+
+
+def vectorized_order(
+    coords: np.ndarray,
+    nparts: int,
+    sfc: str,
+    *,
+    weights: np.ndarray | None = None,
+    dim_order: np.ndarray | None = None,
+    longest_dim: bool = True,
+    uneven_prime: bool = False,
+) -> np.ndarray:
+    """Level-synchronous Algorithm 2; same contract as ``order_points``.
+
+    Returns the ``(n,)`` int64 part numbers ``mu``, bit-identical to the
+    recursive reference.  ``sfc`` must be one of Z | Gray | FZ | FZlow
+    (Hilbert is dispatched before reaching the MJ engine).
+    """
+    coords = np.asarray(coords, dtype=np.float64)
+    n = len(coords)
+    if nparts <= 1 or n == 0:
+        return np.zeros(n, dtype=np.int64)
+    w = None if weights is None else np.asarray(weights, dtype=np.float64)
+    try:
+        return _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
+                           uneven_prime)
+    except _TieFallback:
+        return _exact_order(coords, nparts, sfc, w, dim_order, longest_dim,
+                            uneven_prime)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _split_counts_table(values: np.ndarray, uneven_prime: bool):
+    """Vectorised mapping nparts -> (npl, npr) through the reference's
+    own ``_split_counts`` (largest-prime uneven bisection when
+    requested), so the engines can never desync from the oracle."""
+    from .orderings import _split_counts
+    npl = np.zeros_like(values)
+    npr = np.zeros_like(values)
+    for v in np.unique(values):
+        if v < 2:
+            continue
+        l, r = _split_counts(int(v), uneven_prime)
+        m = values == v
+        npl[m] = l
+        npr[m] = r
+    return npl, npr
+
+
+def _pick_cut_dims(ext: np.ndarray, dim_order) -> np.ndarray:
+    """Longest-dim selection for all segments at once.  Replicates
+    ``orderings._longest_dim``: scan ``dim_order``, replacing the best
+    only on a strict ``> best + 1e-12`` improvement."""
+    nseg, d = ext.shape
+    if dim_order is None:
+        dim_order = np.arange(d)
+    first = int(dim_order[0])
+    best = np.full(nseg, first, dtype=np.int64)
+    best_ext = ext[:, first].copy()
+    for dd in dim_order:
+        dd = int(dd)
+        better = ext[:, dd] > best_ext + 1e-12
+        best[better] = dd
+        best_ext[better] = ext[better, dd]
+    return best
+
+
+def _uniform_cuts(sizes: np.ndarray, ratio: np.ndarray,
+                  base: np.ndarray | None = None) -> np.ndarray:
+    """Reference cut index for unit weights: ``cw`` of every segment is
+    a prefix of [1, 2, 3, ...], so one shared base array serves all
+    segments (identical float comparisons to the reference)."""
+    maxlen = int(sizes.max())
+    if base is None or len(base) < maxlen:
+        base = np.arange(1, maxlen + 1, dtype=np.float64)
+    targets = sizes.astype(np.float64) * ratio
+    k = np.searchsorted(base[:maxlen], targets, side="left") + 1
+    return np.minimum(np.maximum(k, 1), sizes - 1)
+
+
+def _padded_cuts(w_seq: np.ndarray, starts: np.ndarray, sizes: np.ndarray,
+                 ratio: np.ndarray, *, on_overflow: str = "raise"
+                 ) -> np.ndarray:
+    """Reference cut index for per-point weights.
+
+    ``w_seq`` holds the weights in reference visit order, segments
+    contiguous at ``starts``/``sizes``.  Row-wise ``np.cumsum`` over a
+    padded (nseg, maxlen) buffer performs the exact same sequence of
+    float additions as the reference's fresh per-segment ``np.cumsum``,
+    keeping the cut placement bit-identical.
+    """
+    nseg = len(starts)
+    maxlen = int(sizes.max())
+    if nseg * maxlen > _PAD_CAP:
+        if on_overflow == "raise":
+            raise _TieFallback
+        # exact-engine fallback for pathologically unbalanced inputs: a
+        # per-segment loop (still the reference arithmetic)
+        k = np.empty(nseg, dtype=np.int64)  # pragma: no cover - huge only
+        for i in range(nseg):  # pragma: no cover
+            cw = np.cumsum(w_seq[starts[i]:starts[i] + sizes[i]])
+            k[i] = np.searchsorted(cw, cw[-1] * ratio[i], side="left") + 1
+        return np.minimum(np.maximum(k, 1), sizes - 1)  # pragma: no cover
+    pad = np.zeros((nseg, maxlen), dtype=np.float64)
+    rows = np.repeat(np.arange(nseg), sizes)
+    cols = np.arange(len(w_seq)) - np.repeat(starts, sizes)
+    pad[rows, cols] = w_seq
+    cw = np.cumsum(pad, axis=1)
+    totals = cw[np.arange(nseg), sizes - 1]
+    targets = totals * ratio
+    in_seg = np.arange(maxlen)[None, :] < sizes[:, None]
+    k = ((cw < targets[:, None]) & in_seg).sum(axis=1) + 1
+    return np.minimum(np.maximum(k, 1), sizes - 1)
+
+
+# ---------------------------------------------------------------------------
+# fast engine: presorted per-dim permutations + segmented stable partitions
+# ---------------------------------------------------------------------------
+
+_IEEE_TOP = np.uint64(0x8000000000000000)
+_IEEE_ONES = np.uint64(0xFFFFFFFFFFFFFFFF)
+_IEEE_63 = np.uint64(63)
+
+
+def _presort(col: np.ndarray) -> np.ndarray:
+    """Value-ascending argsort at quicksort speed (tie order arbitrary).
+
+    Maps the doubles to order-preserving uint64 keys (IEEE total-order
+    trick; ``+0.0`` canonicalises ``-0.0`` first) and argsorts those
+    with the default introsort.  The fast engine never relies on tie
+    ORDER — every cut whose outcome could depend on it is caught by the
+    value-based straddle/tie detection and rerouted to the exact engine
+    — so the stable-sort repair pass is unnecessary.
+    """
+    u = (col + 0.0).view(np.uint64)  # owns its buffer: in-place is safe
+    m = u >> _IEEE_63
+    m *= _IEEE_ONES
+    m |= _IEEE_TOP
+    u ^= m
+    return np.argsort(u)
+
+
+def _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
+                uneven_prime):
+    n, d = coords.shape
+    cols = np.ascontiguousarray(coords.T)  # (d, n) value lookups
+    cols_flat = cols.reshape(-1)
+    Q = np.empty((d, n), dtype=np.int64)
+    for j in range(d):
+        Q[j] = _presort(cols[j])
+    q_buf = np.empty_like(Q) if d > 1 else Q  # partition double-buffer
+    pos = pos32 = None  # built lazily: unused on the pure-1D fast path
+
+    def _positions():
+        nonlocal pos, pos32
+        if pos is None:
+            pos = np.arange(n, dtype=np.int64)
+            pos32 = pos.astype(np.int32)
+        return pos
+
+    cut_base = np.arange(1, n + 1, dtype=np.float64)
+    weighted = w is not None
+    dimo = np.arange(d) if dim_order is None else \
+        np.asarray(dim_order, dtype=np.int64)
+
+    # segment table (sorted by start); signs[s, j] = net flip of dim j;
+    # base[s] = part offset of the segment (mu is scattered once at end)
+    starts = np.array([0], dtype=np.int64)
+    sizes = np.array([n], dtype=np.int64)
+    pnum = np.array([nparts], dtype=np.int64)
+    base = np.array([0], dtype=np.int64)
+    signs = np.ones((1, d), dtype=np.int8)
+    level = 0
+    # permutation whose blocks match the FINAL table: after the last
+    # split only each block's own cut-dim row is split in place, so the
+    # closing scatter must read through that row's layout
+    final_pts = Q[0]
+
+    while True:
+        act = (pnum > 1) & (sizes > 1)
+        if not act.any():
+            break
+        nseg = len(starts)
+        ends = starts + sizes
+
+        # --- cut dimension ----------------------------------------------
+        # Each block of Q[j] is ascending along dim j, so per-segment
+        # extents are just the block-end values; extents are also
+        # flip-invariant (max(s*x) - min(s*x) == max(x) - min(x) exactly)
+        if d == 1:  # only one dimension to cut
+            cut = np.zeros(nseg, dtype=np.int64)
+            sgn = signs[:, 0]
+        elif longest_dim:
+            lo = np.empty((nseg, d))
+            hi = np.empty((nseg, d))
+            for j in range(d):
+                lo[:, j] = cols[j][Q[j, starts]]
+                hi[:, j] = cols[j][Q[j, ends - 1]]
+            cut = _pick_cut_dims(hi - lo, dimo)
+            sgn = signs[np.arange(nseg), cut]
+        else:
+            cut = np.full(nseg, int(dimo[level % d]), dtype=np.int64)
+            sgn = signs[np.arange(nseg), cut]
+        one_dim = d == 1 or (cut[act] == cut[act][0]).all()
+        c0 = int(cut[act][0])
+
+        # --- split counts + cut index k (in reference visit order) ------
+        npl, npr = _split_counts_table(np.where(act, pnum, 0), uneven_prime)
+        ratio = np.where(act, npl / np.maximum(pnum, 1), 0.0)
+        if not one_dim:
+            cut_pt = np.repeat(cut, sizes)
+        if not weighted:
+            k = _uniform_cuts(sizes, ratio, cut_base)
+        else:
+            # weight sequence in reference order: ascending block for
+            # sign +1, descending for sign -1 (no ties on this path)
+            start_pt = np.repeat(starts, sizes)
+            sgn_pt = np.repeat(sgn, sizes)
+            end_pt = np.repeat(ends, sizes)
+            p_ = _positions()
+            asc = np.where(sgn_pt > 0, p_, start_pt + end_pt - 1 - p_)
+            if one_dim:
+                w_seq = w[Q[c0, asc]]
+            else:
+                w_seq = w[Q.reshape(-1)[cut_pt * n + asc]]
+            blk = np.repeat(np.arange(nseg), sizes)
+            ab = act[blk]
+            a_sz = sizes[act]
+            k = np.ones(nseg, dtype=np.int64)
+            k[act] = _padded_cuts(w_seq[ab], np.cumsum(a_sz) - a_sz, a_sz,
+                                  ratio[act])
+        # first child block holds kappa points: the reference's left
+        # child for sign +1, its right child for sign -1
+        kappa = np.where(act, np.where(sgn > 0, k, sizes - k), sizes)
+
+        # --- tie detection ----------------------------------------------
+        a = np.flatnonzero(act)
+        if weighted:
+            # any tie inside an active block reorders the weight cumsum;
+            # compare adjacent sorted values per active block
+            if one_dim:
+                v_blk = cols[c0][Q[c0]]
+            else:
+                v_blk = cols_flat[cut_pt * n +
+                                  Q.reshape(-1)[cut_pt * n + _positions()]]
+            same = (blk[1:] == blk[:-1]) & ab[:-1]
+            if (same & (v_blk[1:] == v_blk[:-1])).any():
+                raise _TieFallback
+        else:
+            b0 = starts[a] + kappa[a] - 1
+            b1 = b0 + 1
+            ca = cut[a]
+            q0 = Q.reshape(-1)[ca * n + b0]
+            q1 = Q.reshape(-1)[ca * n + b1]
+            if (cols_flat[ca * n + q0] == cols_flat[ca * n + q1]).any():
+                raise _TieFallback
+
+        # --- next level's segment table (mu deferred via base) ----------
+        prev_starts, prev_sizes = starts, sizes
+        s2 = sizes - kappa  # 0 for inactive segments
+        p1 = np.where(act, np.where(sgn > 0, npl, npr), pnum)
+        p2 = np.where(sgn > 0, npr, npl)
+        # reference: left child keeps base, right child gets base + npl
+        b1_ = np.where(act, np.where(sgn > 0, base, base + npl), base)
+        b2_ = np.where(sgn > 0, base + npl, base)
+        new_starts = np.repeat(starts, 2)
+        new_starts[1::2] += kappa
+        new_sizes = np.stack([kappa, s2], axis=1).reshape(-1)
+        new_pnum = np.stack([p1, p2], axis=1).reshape(-1)
+        new_base = np.stack([b1_, b2_], axis=1).reshape(-1)
+        new_signs = np.repeat(signs, 2, axis=0)
+        if sfc in ("Gray", "FZ", "FZlow"):
+            # reference-right child = second block for sign +1, first
+            # block for sign -1; FZlow flips the reference-LEFT child
+            flip_left = sfc == "FZlow"
+            child = np.where((sgn > 0) != flip_left, 1, 0)
+            rows = (2 * np.arange(nseg) + child)[act]
+            if sfc == "Gray":
+                new_signs[rows] = -new_signs[rows]
+            else:
+                new_signs[rows, cut[act]] = -new_signs[rows, cut[act]]
+        keep = new_sizes > 0
+        starts = new_starts[keep]
+        sizes = new_sizes[keep]
+        pnum = new_pnum[keep]
+        base = new_base[keep]
+        signs = new_signs[keep]
+        level += 1
+
+        if not ((pnum > 1) & (sizes > 1)).any():
+            final_pts = Q[c0] if one_dim else \
+                Q.reshape(-1)[cut_pt * n + _positions()]
+            break
+        if d == 1:
+            final_pts = Q[0]
+            continue  # blocks of the only dim split in place
+
+        # --- apply the splits to the other dims' permutations -----------
+        # Stable partition per dim: each block's first-child members move
+        # to the front, second-child members to the back, both in block
+        # order, so every block stays value-sorted.  The cut dim's own
+        # blocks split in place (its partition is the identity), so when
+        # all active segments cut the same dim that row is skipped.
+        thr_pt = np.repeat(prev_starts + kappa, prev_sizes)
+        g_pos = _positions() < thr_pt  # True = first child block
+        g_pt = np.empty(n, dtype=bool)
+        if one_dim:
+            g_pt[Q[c0]] = g_pos
+        else:
+            g_pt[Q.reshape(-1)[cut_pt * n + pos]] = g_pos
+        for j in range(d):
+            if one_dim and j == c0:
+                q_buf[j] = Q[j]
+                continue
+            G = g_pt[Q[j]]
+            T = np.cumsum(G, dtype=np.int32)
+            np.subtract(T, G, out=T, casting="unsafe")
+            c_ex = T[prev_starts]  # trues before each block
+            # dest_first = T + (start - c_ex);  dest_second = pos +
+            # (kappa + c_ex) - T   (both per point, derived from the
+            # running count of first-child members)
+            a_pt = np.repeat(
+                (prev_starts - c_ex).astype(np.int32), prev_sizes)
+            b_pt = np.repeat(
+                (kappa + c_ex).astype(np.int32), prev_sizes)
+            b_pt += pos32
+            b_pt -= T
+            T += a_pt
+            dest = np.where(G, T, b_pt)
+            q_buf[j][dest] = Q[j]
+        Q, q_buf = q_buf, Q
+        final_pts = Q[0]
+
+    mu = np.empty(n, dtype=np.int32)  # nparts <= n < 2^31
+    mu[final_pts] = np.repeat(base.astype(np.int32), sizes)
+    return mu.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# exact engine: one segmented lexsort per level, materialised flips
+# ---------------------------------------------------------------------------
+
+def _exact_order(coords, nparts, sfc, w, dim_order, longest_dim,
+                 uneven_prime):
+    coords = coords.copy()
+    n, d = coords.shape
+    mu = np.zeros(n, dtype=np.int64)
+    weighted = w is not None
+
+    order = np.arange(n)
+    starts = np.array([0], dtype=np.int64)
+    sizes = np.array([n], dtype=np.int64)
+    seg_np = np.array([nparts], dtype=np.int64)
+    level = 0
+
+    while True:
+        active = (seg_np > 1) & (sizes > 1)
+        if not active.any():
+            break
+        a_starts = starts[active]
+        a_sizes = sizes[active]
+        a_np = seg_np[active]
+
+        # --- cut dimension per active segment ---------------------------
+        if longest_dim:
+            vals = coords[order]
+            hi = np.maximum.reduceat(vals, starts, axis=0)
+            lo = np.minimum.reduceat(vals, starts, axis=0)
+            cut = _pick_cut_dims(hi - lo, dim_order)[active]
+        else:
+            od = dim_order if dim_order is not None else np.arange(d)
+            cut = np.full(len(a_starts), int(od[level % d]), dtype=np.int64)
+
+        # active-point positions (a union of contiguous blocks of order)
+        p_starts = np.cumsum(a_sizes) - a_sizes  # packed per-segment starts
+        pos = (np.repeat(a_starts - p_starts, a_sizes)
+               + np.arange(int(a_sizes.sum())))
+        seg_of = np.repeat(np.arange(len(a_starts)), a_sizes)
+
+        # --- segmented stable sort along each segment's cut dim ---------
+        pts = order[pos]
+        key = coords[pts, cut[seg_of]]
+        perm = np.lexsort((key, seg_of))
+        pts = pts[perm]
+        order[pos] = pts
+
+        # --- cut placement ----------------------------------------------
+        npl, npr = _split_counts_table(a_np, uneven_prime)
+        ratio = npl / a_np
+        if not weighted:
+            k = _uniform_cuts(a_sizes, ratio)
+        else:
+            k = _padded_cuts(w[pts], p_starts, a_sizes, ratio,
+                             on_overflow="loop")
+
+        # --- flips + part-number updates --------------------------------
+        in_seg_idx = np.arange(len(pts)) - p_starts[seg_of]
+        right = in_seg_idx >= k[seg_of]
+        r_pts = pts[right]
+        if sfc == "Gray":
+            coords[r_pts] = -coords[r_pts]
+        elif sfc == "FZ":
+            rc = cut[seg_of[right]]
+            coords[r_pts, rc] = -coords[r_pts, rc]
+        elif sfc == "FZlow":
+            l_pts = pts[~right]
+            lc = cut[seg_of[~right]]
+            coords[l_pts, lc] = -coords[l_pts, lc]
+        mu[r_pts] += npl[seg_of[right]]
+
+        # --- next level's segment table ---------------------------------
+        starts = np.concatenate([starts[~active], a_starts, a_starts + k])
+        sizes = np.concatenate([sizes[~active], k, a_sizes - k])
+        seg_np = np.concatenate([seg_np[~active], npl, npr])
+        srt = np.argsort(starts, kind="stable")
+        starts, sizes, seg_np = starts[srt], sizes[srt], seg_np[srt]
+        level += 1
+
+    return mu

@@ -185,9 +185,9 @@ def run_cell(arch: str, shape_name: str, mesh, out_dir: str,
         compiled = lowered.compile()
         t_compile = time.perf_counter() - t0
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        from repro.launch.hlo_cost import analyze, xla_cost_analysis
+        cost = xla_cost_analysis(compiled)
         hlo = compiled.as_text()
-        from repro.launch.hlo_cost import analyze
         t0 = time.perf_counter()
         model = analyze(hlo)  # trip-count-scaled per-device costs
         t_analyze = time.perf_counter() - t0
@@ -202,7 +202,7 @@ def run_cell(arch: str, shape_name: str, mesh, out_dir: str,
              "alias_size_in_bytes") if hasattr(mem, k)}
         # raw XLA numbers (undercount while bodies; kept for reference)
         rec["cost_xla_raw"] = {
-            k: float(v) for k, v in (cost or {}).items()
+            k: float(v) for k, v in cost.items()
             if isinstance(v, (int, float)) and (
                 "flops" in k or k == "bytes accessed")}
         # trip-scaled per-device model (see hlo_cost.py)

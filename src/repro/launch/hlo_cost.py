@@ -36,6 +36,19 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalised across jax versions.
+
+    Older jaxlibs return a one-element list of dicts (per device
+    program), newer ones a plain dict; both collapse to a dict here so
+    callers can index ``["flops"]`` unconditionally.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
 _ELTWISE_1 = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
               "and", "or", "xor", "compare", "select", "negate", "abs",
               "floor", "ceil", "round-nearest-afz", "sign"}
@@ -159,17 +172,19 @@ def parse_hlo(text: str) -> dict:
 
 
 def _operand_names(rest: str) -> list:
-    # operands end at the first ")," or ")" at depth 0 of the leading parens
+    # operands end at the first ")" at depth 0 of the leading parens;
+    # depth must track [] and {} too — operand types like
+    # ``f32[8,8]{1,0}`` contain commas that are NOT operand separators
     ops = []
     depth = 0
     buf = ""
     for ch in rest:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
             buf += ch
-        elif ch == ")":
-            if depth == 0:
-                break
+        elif ch == ")" and depth == 0:
+            break
+        elif ch in ")]}":
             depth -= 1
             buf += ch
         elif ch == "," and depth == 0:

@@ -2,9 +2,12 @@
 
 ``make_production_mesh`` is the spec-mandated function (single-pod 16x16
 or 2-pod 2x16x16).  ``make_topology_mesh`` is the same geometry built
-through the paper's geometric mapper (repro.meshmap) — device order is
-permuted to minimise modeled ICI/DCN link traffic.  Importing this
-module never touches jax device state.
+through the unified ``repro.mapping`` pipeline (via
+``repro.meshmap.topology_mesh``): candidate device orders are generated
+by the vectorised Multi-Jagged partitioner and scored in one batched
+(Latency(M), WeightedHops) pass, so the device order is never worse
+than jax's enumeration.  Importing this module never touches jax device
+state.
 """
 
 from __future__ import annotations
@@ -18,8 +21,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_topology_mesh(*, multi_pod: bool = False, return_report=False):
+def make_topology_mesh(*, multi_pod: bool = False, return_report=False,
+                       axis_bytes=None, rotations: int = 8):
     from repro.meshmap.device_mesh import topology_mesh
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return topology_mesh(shape, axes, return_report=return_report)
+    return topology_mesh(shape, axes, return_report=return_report,
+                         axis_bytes=axis_bytes, rotations=rotations)

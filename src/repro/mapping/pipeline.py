@@ -1,0 +1,184 @@
+"""The mapping pipeline: machine transforms -> partitioner -> matching
+-> candidate scoring (paper Alg. 1 + §4.3, one engine for every caller).
+
+``MappingPipeline`` owns the full Z2-style flow that used to be split
+(and partially duplicated) between ``core/mapping.py::Mapper`` and
+``meshmap/device_mesh.py::select_mapping``:
+
+- :meth:`machine_coords` applies the machine-side transforms (core-dim
+  drop, torus shift, bandwidth scaling, "+E" dim drops, box lift);
+- :meth:`map_candidate` runs one geometric mapping (Algorithm 1) for a
+  single rotation/scaling candidate through the level-synchronous
+  vectorised partitioner (``backend`` selects the engine);
+- :meth:`map` enumerates the rotation candidates and scores them with
+  the batched :class:`repro.mapping.candidates.CandidateSearch`.
+
+``core.mapping.Mapper`` and ``meshmap.select_mapping`` are thin
+adapters over this class; benchmarks therefore all route through one
+search implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.kmeans import closest_subset
+from repro.core.machine import Allocation
+from repro.core.mapping import MappingResult, match_parts
+from repro.core.orderings import order_points
+from repro.core.transforms import (apply_permutation, box_lift, drop_dims,
+                                   scale_by_bandwidth, shift_torus)
+from repro.mapping.candidates import CandidateSearch, rotation_candidates
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    """Configuration of the unified mapping pipeline.
+
+    Partitioner stage:
+      sfc          : part-numbering ordering ("FZ" is the paper's winner).
+      mfz          : use the MFZ task-side variant when pd % td == 0.
+      longest_dim  : cut the longest dimension (False = strict
+                     alternation).
+      uneven_prime : Z2_2 — largest-prime-divisor uneven bisection.
+      backend      : ``order_points`` backend ("vectorized"/"recursive").
+
+    Machine-transform stage:
+      shift           : torus wrap-around shifting of machine coords.
+      bandwidth_scale : Z2_2 — scale distances by 1/link-bandwidth.
+      box             : Z2_3 — lift machine coords by this box shape.
+      box_outer_weight: scale of the between-box coordinates.
+      drop            : dims to drop from machine coords (BG/Q "+E").
+
+    Candidate-search stage:
+      rotations : 0 = identity rotation only; otherwise max number of
+                  (task_perm, proc_perm) pairs evaluated.
+      objective : metric key (or tuple, lexicographic) minimised by the
+                  search; "weighted_hops" is the paper's choice.
+    """
+
+    sfc: str = "FZ"
+    mfz: str | bool = "auto"
+    shift: bool = True
+    bandwidth_scale: bool = False
+    box: tuple | None = None
+    box_outer_weight: float = 16.0
+    drop: tuple = ()
+    rotations: int = 0
+    uneven_prime: bool = False
+    longest_dim: bool = True
+    backend: str = "vectorized"
+    objective: str | tuple = "weighted_hops"
+
+
+class MappingPipeline:
+    """Maps a TaskGraph onto an Allocation through pluggable stages."""
+
+    def __init__(self, config: PipelineConfig | None = None):
+        self.config = config or PipelineConfig()
+        self.search = CandidateSearch(self.config.objective)
+
+    # -- stage 1: machine transforms ------------------------------------
+
+    def machine_coords(self, alloc: Allocation) -> np.ndarray:
+        """Apply the machine-side transforms of the pipeline.
+
+        Core dims are dropped first: every core of a node carries its
+        ROUTER's coordinates (paper §2 — coordinates come from the
+        router; intra-node communication is free).  MJ then keeps a
+        node's cores in consecutive parts automatically (equal
+        coordinates are never separated before everything else is cut).
+        """
+        cfg = self.config
+        machine = alloc.machine
+        coords = alloc.coords.astype(np.float64)
+        if machine.core_dims:
+            nd = machine.ndim - machine.core_dims
+            coords = coords[:, :nd]
+        if cfg.shift:
+            coords = shift_torus(coords, machine)
+        if cfg.bandwidth_scale:
+            coords = scale_by_bandwidth(coords, machine)
+        if cfg.drop:
+            coords = drop_dims(coords, cfg.drop)
+        if cfg.box is not None:
+            nd = coords.shape[1]
+            box = tuple(cfg.box) + (1,) * (nd - len(cfg.box))
+            coords = box_lift(coords, box, outer_weight=cfg.box_outer_weight)
+        return coords
+
+    # -- stages 2+3: partition + match for ONE candidate -----------------
+
+    def map_candidate(
+        self,
+        task_coords: np.ndarray,
+        proc_coords: np.ndarray,
+        *,
+        task_weights: np.ndarray | None = None,
+        task_perm=None,
+        proc_perm=None,
+    ) -> MappingResult:
+        """Paper Algorithm 1 for one (task_perm, proc_perm) rotation."""
+        cfg = self.config
+        tc = np.asarray(task_coords, dtype=np.float64)
+        pc = np.asarray(proc_coords, dtype=np.float64)
+        if task_perm is not None:
+            tc = apply_permutation(tc, task_perm)
+        if proc_perm is not None:
+            pc = apply_permutation(pc, proc_perm)
+        tnum, td = tc.shape
+        pnum, pd = pc.shape
+
+        subset = None
+        if tnum < pnum:
+            subset = closest_subset(pc, tnum)
+            pc = pc[subset]
+            pnum = tnum
+        np_parts = min(tnum, pnum)
+
+        task_sfc = proc_sfc = cfg.sfc
+        use_mfz = (cfg.mfz is True) or (
+            cfg.mfz == "auto" and cfg.sfc == "FZ" and pd != td
+            and pd % max(td, 1) == 0)
+        if use_mfz:
+            task_sfc = "FZlow"  # MFZ: flip the LOW half, smaller-dim side
+            proc_sfc = "FZ"
+
+        mu_t = order_points(tc, np_parts, task_sfc, weights=task_weights,
+                            longest_dim=cfg.longest_dim,
+                            uneven_prime=cfg.uneven_prime,
+                            backend=cfg.backend)
+        mu_p = order_points(pc, np_parts, proc_sfc,
+                            longest_dim=cfg.longest_dim,
+                            uneven_prime=cfg.uneven_prime,
+                            backend=cfg.backend)
+        t2p = match_parts(mu_t, mu_p)
+        if subset is not None:
+            t2p = subset[t2p]
+        return MappingResult(t2p, rotation=(tuple(task_perm or ()),
+                                            tuple(proc_perm or ())))
+
+    # -- stage 4: candidate search ---------------------------------------
+
+    def map(self, graph, alloc: Allocation,
+            task_coords: np.ndarray | None = None,
+            task_weights: np.ndarray | None = None) -> MappingResult:
+        """Full pipeline: transforms, rotation candidates, batched
+        scoring; returns the best MappingResult (score = objective)."""
+        cfg = self.config
+        pc = self.machine_coords(alloc)
+        tc = np.asarray(task_coords if task_coords is not None
+                        else graph.coords, dtype=np.float64)
+        cands = rotation_candidates(tc.shape[1], pc.shape[1], cfg.rotations)
+        results = [
+            self.map_candidate(tc, pc, task_weights=task_weights,
+                               task_perm=c.task_perm, proc_perm=c.proc_perm)
+            for c in cands
+        ]
+        if len(results) == 1:
+            return results[0]
+        best, best_i, scores = self.search.best(graph, alloc, results)
+        best.score = float(scores[best_i][0])
+        return best

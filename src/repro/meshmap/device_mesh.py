@@ -21,9 +21,10 @@ import numpy as np
 import jax
 from jax.sharding import Mesh
 
-from repro.core import (Allocation, Mapper, MapperConfig, block_allocation,
-                        evaluate, identity_mapping, logical_mesh_graph,
+from repro.core import (Allocation, block_allocation, evaluate,
+                        identity_mapping, logical_mesh_graph,
                         tpu_v5e_multipod, tpu_v5e_pod)
+from repro.mapping import CandidateSearch, MappingPipeline, PipelineConfig
 
 # Relative per-link traffic of one training step along each logical axis
 # (bytes are arbitrary units; only ratios steer the mapper).
@@ -98,24 +99,27 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
 def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 8):
     """Candidate search: default order + FZ mappings under raw and
     traffic-scaled task coordinates x rotations; returns
-    (best MappingResult, best metrics, default metrics)."""
+    (best MappingResult, best metrics, default metrics).
 
-    def score(res):
-        m = evaluate(graph, alloc, res)
-        return (m["latency_max"], m["weighted_hops"]), m
-
+    Candidate generation and scoring both run through the unified
+    ``repro.mapping`` pipeline: each (scaling, rotation-budget) entry is
+    one ``MappingPipeline.map`` call (whose internal rotation search is
+    the paper's WeightedHops objective), and the outer selection scores
+    every candidate in one batched (Latency(M), WeightedHops) pass.
+    The identity/default mapping is listed first, so on ties the search
+    is never worse than jax's enumeration order.
+    """
     candidates = [identity_mapping(graph, alloc)]
     for scaled in (False, True):
         tc = graph.coords.astype(float)
         if scaled:
             tc = tc / np.asarray(axis_bytes, dtype=float)
         for rot in (0, rotations):
-            mapper = Mapper(MapperConfig(sfc="FZ", shift=True,
-                                         bandwidth_scale=True,
-                                         rotations=rot))
-            candidates.append(mapper.map(graph, alloc, task_coords=tc))
-    scored = [(score(c), c) for c in candidates]
-    base_metrics = scored[0][0][1]
-    scored.sort(key=lambda x: x[0][0])
-    (_, best_metrics), best = scored[0]
+            pipe = MappingPipeline(PipelineConfig(
+                sfc="FZ", shift=True, bandwidth_scale=True, rotations=rot))
+            candidates.append(pipe.map(graph, alloc, task_coords=tc))
+    search = CandidateSearch(objective=("latency_max", "weighted_hops"))
+    best, _, _ = search.best(graph, alloc, candidates)
+    best_metrics = evaluate(graph, alloc, best)
+    base_metrics = evaluate(graph, alloc, candidates[0])
     return best, best_metrics, base_metrics

@@ -24,7 +24,9 @@ import numpy as np
 
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree_util has carried tree_flatten_with_path since 0.4.x;
+    # jax.tree.flatten_with_path only appeared in much newer releases.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                      for k in path) for path, _ in flat]
     vals = [v for _, v in flat]

@@ -1,0 +1,183 @@
+"""Equivalence suite: the level-synchronous vectorised partitioner must
+return part numbers BIT-IDENTICAL to the recursive reference (paper
+Alg. 2) for every configuration — random point sets, weights,
+``uneven_prime``, ``dim_order``, strict-alternation mode, and every SFC
+kind, including the tie-heavy structured-grid inputs that exercise the
+engine's exact fallback.  Property-style via seeded numpy RNG (no
+hypothesis dependency, so tier-1 runs everywhere)."""
+
+import numpy as np
+import pytest
+
+from repro.core import partition
+from repro.core.orderings import order_points, order_points_recursive
+
+SFCS = ("Z", "Gray", "FZ", "FZlow")
+
+
+def _grid_coords(shape):
+    ix = np.indices(shape)
+    return np.stack([c.ravel() for c in ix], axis=1).astype(float)
+
+
+def _assert_equiv(coords, nparts, sfc, **kw):
+    a = order_points(coords, nparts, sfc, backend="vectorized", **kw)
+    b = order_points_recursive(coords, nparts, sfc, **kw)
+    assert np.array_equal(a, b), (
+        f"backend mismatch: sfc={sfc} nparts={nparts} kw={kw} "
+        f"ndiff={(a != b).sum()}/{len(a)}")
+    return a
+
+
+# ---------------------------------------------------------------------------
+# random point sets across every knob
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(24))
+def test_random_points_all_knobs(seed):
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(1, 5))
+    n = int(rng.integers(2, 500))
+    nparts = int(rng.integers(1, 80))
+    sfc = SFCS[seed % 4]
+    weights = rng.random(n) if seed % 3 == 0 else None
+    uneven = bool(seed % 2)
+    longest = seed % 5 != 0
+    dim_order = rng.permutation(d) if seed % 4 == 0 else None
+    coords = rng.normal(size=(n, d))
+    mu = _assert_equiv(coords, nparts, sfc, weights=weights,
+                       uneven_prime=uneven, longest_dim=longest,
+                       dim_order=dim_order)
+    if nparts >= 1:
+        assert mu.min() >= 0 and mu.max() < max(nparts, 1)
+
+
+@pytest.mark.parametrize("sfc", SFCS)
+def test_balanced_partition_sizes(sfc):
+    rng = np.random.default_rng(7)
+    coords = rng.normal(size=(256, 3))
+    mu = _assert_equiv(coords, 64, sfc)
+    assert (np.bincount(mu, minlength=64) == 4).all()
+
+
+# ---------------------------------------------------------------------------
+# tie-heavy grids (closed-form cross-check territory)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sfc", SFCS)
+@pytest.mark.parametrize("shape", [(16,), (8, 8), (4, 4, 4), (2, 2, 2, 2)])
+def test_grids_full_parts(sfc, shape):
+    coords = _grid_coords(shape)
+    _assert_equiv(coords, coords.shape[0], sfc)
+
+
+@pytest.mark.parametrize("sfc", SFCS)
+@pytest.mark.parametrize("nparts", [2, 4, 8])
+def test_grids_coarse_parts(sfc, nparts):
+    coords = _grid_coords((8, 8))
+    _assert_equiv(coords, nparts, sfc)
+
+
+@pytest.mark.parametrize("sfc", SFCS)
+def test_duplicated_points_fall_back_exactly(sfc):
+    """Straddling tie groups force the exact engine; results must still
+    match the reference bit for bit."""
+    rng = np.random.default_rng(5)
+    coords = np.repeat(rng.normal(size=(37, 2)), 7, axis=0)
+    _assert_equiv(coords, 16, sfc)
+    _assert_equiv(coords, 16, sfc, weights=rng.random(len(coords)))
+
+
+def test_tie_fallback_is_detected():
+    """All-identical coordinates must route to the exact engine (and
+    agree with the reference), not silently mis-split."""
+    coords = np.zeros((64, 2))
+    coords[:, 1] = np.arange(64) % 2  # ties along dim 0, the cut dim
+    with pytest.raises(partition._TieFallback):
+        partition._fast_order(coords, 4, "Z", None, None, True, False)
+    _assert_equiv(coords, 4, "Z")
+
+
+# ---------------------------------------------------------------------------
+# weighted / uneven corner cases
+# ---------------------------------------------------------------------------
+
+def test_weighted_heavy_head():
+    coords = np.arange(64, dtype=float)[:, None]
+    w = np.ones(64)
+    w[:8] = 8.0
+    mu = _assert_equiv(coords, 2, "Z", weights=w)
+    left = np.flatnonzero(mu == 0)
+    assert abs(w[left].sum() - w.sum() / 2) <= w.max()
+
+
+@pytest.mark.parametrize("nparts", [3, 5, 6, 20, 48, 10800 // 100])
+def test_uneven_prime_counts(nparts):
+    coords = np.arange(300, dtype=float)[:, None]
+    mu = _assert_equiv(coords, nparts, "Z", uneven_prime=True)
+    counts = np.bincount(mu, minlength=nparts)
+    assert counts.sum() == 300 and mu.max() == nparts - 1
+    assert counts.min() >= 300 // nparts - 1
+
+
+def test_more_parts_than_points():
+    rng = np.random.default_rng(3)
+    coords = rng.normal(size=(5, 2))
+    _assert_equiv(coords, 16, "FZ")
+
+
+def test_single_point_and_single_part():
+    assert order_points(np.zeros((1, 3)), 8, "FZ")[0] == 0
+    assert (order_points(np.random.default_rng(0).normal(size=(32, 2)),
+                         1, "FZ") == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# engines under the hood
+# ---------------------------------------------------------------------------
+
+def test_padded_buffer_overflow_falls_back_to_loop(monkeypatch):
+    """When the padded cumsum buffer would exceed the cap, the exact
+    engine must take the per-segment loop — not leak _TieFallback."""
+    monkeypatch.setattr(partition, "_PAD_CAP", 16)
+    rng = np.random.default_rng(21)
+    coords = rng.normal(size=(200, 2))
+    w = rng.random(200)
+    _assert_equiv(coords, 16, "FZ", weights=w)
+
+
+def test_exact_engine_matches_reference_directly():
+    rng = np.random.default_rng(11)
+    coords = rng.normal(size=(200, 3))
+    w = rng.random(200)
+    a = partition._exact_order(coords, 32, "FZ", w, None, True, False)
+    b = order_points_recursive(coords, 32, "FZ", weights=w)
+    assert np.array_equal(a, b)
+
+
+def test_presort_is_value_ascending():
+    rng = np.random.default_rng(13)
+    x = rng.normal(size=4096)
+    # unique values: must equal the stable sort exactly
+    assert np.array_equal(partition._presort(x),
+                          np.argsort(x, kind="stable"))
+    # duplicates (incl. -0.0 vs 0.0): still a value-ascending permutation
+    x[:200] = x[200:400]
+    x[100] = -0.0
+    x[101] = 0.0
+    p = partition._presort(x)
+    assert sorted(p.tolist()) == list(range(len(x)))
+    assert (np.diff(x[p]) >= 0).all()
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError):
+        order_points(np.zeros((4, 1)), 2, "FZ", backend="nope")
+
+
+def test_hilbert_backend_passthrough():
+    rng = np.random.default_rng(17)
+    coords = rng.normal(size=(64, 2))
+    a = order_points(coords, 8, "H")
+    b = order_points_recursive(coords, 8, "H")
+    assert np.array_equal(a, b)
