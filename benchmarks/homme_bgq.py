@@ -41,6 +41,11 @@ ALLOC_DIMS = {
 
 NE = 128  # 6*128*128 = 98,304 elements (the paper's hybrid/MPI dataset)
 
+# §4.3 rotation-search budget per Z2 mapping.  The batched sweep
+# partitions all rotations in ~2 engine passes, so a real search is now
+# affordable where the pre-batching default was 0 (identity only).
+ROTATIONS = 8
+
 
 def homme_sfc_parts(ne: int, nparts: int) -> np.ndarray:
     """HOMME's default partition: Hilbert SFC on each cube face,
@@ -85,7 +90,8 @@ def run_point(nranks: int, *, transforms=("sphere", "cube", "face2d"),
         for pe in plus_e:
             drop = (4,) if pe else ()   # E is dim index 4 of (A,B,C,D,E)
             tag = f"Z2-{tname}" + ("+E" if pe else "")
-            mapper = Mapper(MapperConfig(sfc="FZ", shift=True, drop=drop))
+            mapper = Mapper(MapperConfig(sfc="FZ", shift=True, drop=drop,
+                                         rotations=ROTATIONS))
             res = mapper.map(graph, alloc, task_coords=tc)
             out[tag] = evaluate(graph, alloc, res)
 

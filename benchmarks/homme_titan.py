@@ -31,6 +31,10 @@ from repro.core.orderings import hilbert_index
 NE = 120
 CORES_PER_ROUTER = 32
 
+# §4.3 rotation-search budget per Z2 variant (the batched sweep makes a
+# real search affordable; pre-batching this was 0 = identity only).
+ROTATIONS = 8
+
 
 def homme_sfc_parts(ne: int, nparts: int) -> np.ndarray:
     n = 6 * ne * ne
@@ -75,11 +79,12 @@ def run_point(nranks: int, seed: int) -> dict:
     out["SFC"] = evaluate(graph, alloc, MappingResult(parts))
     out["SFC-ideal"] = evaluate(graph, alloc_raw, MappingResult(parts))
     variants = {
-        "Z2_1": MapperConfig(sfc="FZ", shift=True),
+        "Z2_1": MapperConfig(sfc="FZ", shift=True, rotations=ROTATIONS),
         "Z2_2": MapperConfig(sfc="FZ", shift=True, uneven_prime=True,
-                             bandwidth_scale=True),
+                             bandwidth_scale=True, rotations=ROTATIONS),
         "Z2_3": MapperConfig(sfc="FZ", shift=True, uneven_prime=True,
-                             bandwidth_scale=True, box=(2, 2, 8)),
+                             bandwidth_scale=True, box=(2, 2, 8),
+                             rotations=ROTATIONS),
     }
     for name, mc in variants.items():
         res = Mapper(mc).map(graph, alloc, task_coords=tc)

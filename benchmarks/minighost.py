@@ -40,6 +40,10 @@ TASK_GRIDS = {
 
 CORES_PER_ROUTER = 32  # 2 nodes x 16 cores share a Gemini router on XK7
 
+# §4.3 rotation-search budget per Z2 variant (the batched sweep makes a
+# real search affordable; pre-batching this was 0 = identity only).
+ROTATIONS = 8
+
 
 def group_mapping(dims, alloc, block=(2, 2, 4)) -> MappingResult:
     """MiniGhost's Group reordering: tasks in 2x2x4 blocks fill a node."""
@@ -66,13 +70,16 @@ def run_point(ncores: int, seed: int, *, nfragments: int = 8) -> dict:
     mappers = {
         "Default": None,
         "Group": "group",
-        "Z2_1": Mapper(MapperConfig(sfc="FZ", shift=True)),
+        "Z2_1": Mapper(MapperConfig(sfc="FZ", shift=True,
+                                    rotations=ROTATIONS)),
         "Z2_2": Mapper(MapperConfig(sfc="FZ", shift=True,
                                     bandwidth_scale=True,
-                                    uneven_prime=True)),
+                                    uneven_prime=True,
+                                    rotations=ROTATIONS)),
         "Z2_3": Mapper(MapperConfig(sfc="FZ", shift=True,
                                     bandwidth_scale=True,
-                                    uneven_prime=True, box=(2, 2, 8))),
+                                    uneven_prime=True, box=(2, 2, 8),
+                                    rotations=ROTATIONS)),
     }
     out = {}
     for name, mapper in mappers.items():

@@ -16,7 +16,7 @@ from .metrics import (Traffic, average_hops, data_metric,
                       total_hops, weighted_hops)
 from .orderings import (BACKENDS, SFC_KINDS, gray_decode, gray_encode,
                         grid_order, hilbert_index, order_points,
-                        order_points_recursive)
+                        order_points_batched, order_points_recursive)
 from .taskgraph import (TaskGraph, cube_coords, cube_sphere_graph,
                         face2d_coords, logical_mesh_graph, stencil_graph)
 from .transforms import (apply_permutation, box_lift, drop_dims,
@@ -33,7 +33,8 @@ __all__ = [
     "gray_decode", "gray_encode", "grid_order", "hilbert_index",
     "identity_mapping", "latency_metric", "logical_mesh_graph",
     "make_machine", "normalize_extents", "order_points",
-    "order_points_recursive", "pairwise_hops", "per_dim_stats",
+    "order_points_batched", "order_points_recursive",
+    "pairwise_hops", "per_dim_stats",
     "permutations", "random_allocation", "route_traffic",
     "scale_by_bandwidth", "sfc_allocation", "shift_torus",
     "stencil_graph", "total_hops", "tpu_v4_cube", "tpu_v5e_multipod",

@@ -64,6 +64,20 @@ class Machine:
         pat = self.link_bw[dim]
         return pat[np.asarray(index) % len(pat)]
 
+    def bw_field(self, dim: int) -> np.ndarray:
+        """Per-link bandwidth along ``dim`` broadcast to the full machine
+        shape: entry at coordinate ``x`` is the bandwidth of the link
+        x -> x+e_dim.  One shared helper for every latency computation
+        (``Traffic.link_latency``, ``per_dim_stats``,
+        ``evaluate_candidates`` and the JAX scoring backend); prepend a
+        ``[None]`` axis to broadcast against candidate stacks.
+        """
+        bw = np.asarray(self.bw(dim, np.arange(self.dims[dim])),
+                        dtype=np.float64)
+        shape = [1] * self.ndim
+        shape[dim] = self.dims[dim]
+        return np.broadcast_to(bw.reshape(shape), self.dims)
+
     def all_coords(self) -> np.ndarray:
         """(nnodes, ndim) integer coordinates of every node, row-major."""
         grids = np.indices(self.dims)

@@ -110,6 +110,9 @@ class MapperConfig:
     uneven_prime   : Z2_2 — largest-prime-divisor uneven bisection.
     longest_dim    : cut the longest dimension (False = strict alternation).
     backend        : partitioner engine ("vectorized" or "recursive").
+    sweep          : rotation-sweep mode ("batched" = ~2 engine passes
+                     for the whole sweep; "loop" = per-candidate oracle).
+    score_backend  : candidate scoring engine ("numpy" or "jax").
     """
 
     sfc: str = "FZ"
@@ -123,6 +126,8 @@ class MapperConfig:
     uneven_prime: bool = False
     longest_dim: bool = True
     backend: str = "vectorized"
+    sweep: str = "batched"
+    score_backend: str = "numpy"
 
 
 class Mapper:

@@ -89,11 +89,7 @@ class Traffic:
         parts = []
         nd = self.machine.ndim - self.machine.core_dims
         for k in range(nd):
-            idx = np.arange(self.machine.dims[k])
-            bw = self.machine.bw(k, idx)  # pattern along dim k
-            shape = [1] * self.machine.ndim
-            shape[k] = self.machine.dims[k]
-            bw_full = np.broadcast_to(bw.reshape(shape), self.machine.dims)
+            bw_full = self.machine.bw_field(k)
             parts.append((self.pos[k] / bw_full).ravel())
             parts.append((self.neg[k] / bw_full).ravel())
         return np.concatenate(parts) if parts else np.zeros(0)
@@ -179,7 +175,15 @@ def _batched_route(machine: Machine, src: np.ndarray, dst: np.ndarray,
 
 def _accumulate_circular(out, row, nrows, s, start, length, w, dims, k):
     """Range-add ``w`` to circular intervals [start, start+length) of each
-    row's 1D link array, writing into ``out`` ((B,) + machine shape)."""
+    row's 1D link array, writing into ``out`` ((B,) + machine shape).
+
+    The difference-array contributions are summed with one flat
+    ``np.bincount`` over ``row*(s+1)+col`` keys — a contiguous segment
+    sum instead of the ``np.add.at`` scatters this used to run, which
+    serialise on repeated indices and dominated the routing profile.
+    Column ``s`` is the overflow bucket for wrapped intervals (it is
+    excluded from the prefix sum).
+    """
     m = length > 0
     if not m.any():
         return
@@ -187,18 +191,20 @@ def _accumulate_circular(out, row, nrows, s, start, length, w, dims, k):
     start = start[m] % s
     length = length[m]
     ww = w[m]
-    diff = np.zeros((nrows, s + 1))
+    base = row * (s + 1)
     end = start + length
     nowrap = end <= s
-    # non-wrapping part
-    np.add.at(diff, (row, start), ww)
-    np.add.at(diff, (row[nowrap], end[nowrap]), -ww[nowrap])
-    # wrapping tail: [0, end-s)
     wr = ~nowrap
+    # non-wrapping part: +w at start, -w at end (s = dump bucket)
+    idx = [base + start, base[nowrap] + end[nowrap]]
+    val = [ww, -ww[nowrap]]
     if wr.any():
-        np.add.at(diff, (row[wr], np.zeros(wr.sum(), dtype=int)), ww[wr])
-        np.add.at(diff, (row[wr], end[wr] - s), -ww[wr])
-        np.add.at(diff, (row[wr], np.full(wr.sum(), s)), -ww[wr])
+        # wrapping tail [0, end-s): +w at 0, -w at end-s; close the head
+        # interval [start, s) in the dump bucket
+        idx += [base[wr], base[wr] + end[wr] - s, base[wr] + s]
+        val += [ww[wr], -ww[wr], -ww[wr]]
+    diff = np.bincount(np.concatenate(idx), weights=np.concatenate(val),
+                       minlength=nrows * (s + 1)).reshape(nrows, s + 1)
     lane = np.cumsum(diff[:, :s], axis=1)
     # scatter back into the batched machine-shaped array: axis k of the
     # machine sits at position k+1 of ``out``
@@ -211,11 +217,30 @@ def _accumulate_circular(out, row, nrows, s, start, length, w, dims, k):
 # Batched candidate evaluation (the mapping pipeline's scoring engine)
 # ---------------------------------------------------------------------------
 
+SCORE_BACKENDS = ("numpy", "jax")
+
+_JAX_EVAL = False  # memoised import: False = untried, None = unavailable
+
+
+def _jax_evaluator():
+    """The JAX scoring entry point, or None when jax cannot be imported
+    (the numpy path is then used transparently)."""
+    global _JAX_EVAL
+    if _JAX_EVAL is False:
+        try:
+            from . import metrics_jax
+            _JAX_EVAL = metrics_jax.evaluate_candidates_jax
+        except Exception:  # pragma: no cover - jax baked into the image
+            _JAX_EVAL = None
+    return _JAX_EVAL
+
+
 def evaluate_candidates(machine: Machine, task_edges: np.ndarray,
                         edge_weights: np.ndarray | None,
                         coord_stack: np.ndarray, *,
                         traffic: bool = False,
-                        chunk_elems: int = 1 << 24) -> dict:
+                        chunk_elems: int = 1 << 24,
+                        backend: str = "numpy") -> dict:
     """Score a stack of candidate mappings in vectorised passes.
 
     ``coord_stack``: (B, ntasks, ndim) — machine coordinate of every task
@@ -225,7 +250,22 @@ def evaluate_candidates(machine: Machine, task_edges: np.ndarray,
     batched dimension-ordered router.  Candidates are processed in
     chunks bounded by ``chunk_elems`` message-coordinates so arbitrarily
     large candidate sets cannot blow up memory.
+
+    ``backend="jax"`` routes the whole scoring pass (hops + the
+    dimension-ordered router) through the jit-compiled accelerator
+    implementation (:mod:`repro.core.metrics_jax`: ``segment_sum`` for
+    the circular range-add, ``vmap`` over candidates).  Results match
+    the numpy path within floating-point tolerance; when jax is not
+    importable the call falls back to numpy silently.  ``"numpy"``
+    (default) is the bit-exact parity-tested reference.
     """
+    if backend not in SCORE_BACKENDS:
+        raise ValueError(f"unknown scoring backend {backend!r}")
+    if backend == "jax":
+        fn = _jax_evaluator()
+        if fn is not None:
+            return fn(machine, task_edges, edge_weights, coord_stack,
+                      traffic=traffic, chunk_elems=chunk_elems)
     coord_stack = np.asarray(coord_stack)
     nb = len(coord_stack)
     ne = len(task_edges)
@@ -260,11 +300,7 @@ def evaluate_candidates(machine: Machine, task_edges: np.ndarray,
             data = np.zeros(b)
             lat = np.zeros(b)
             for k in range(nd):
-                idx = np.arange(machine.dims[k])
-                bw = np.asarray(machine.bw(k, idx), dtype=np.float64)
-                shape = [1] * (machine.ndim + 1)
-                shape[k + 1] = machine.dims[k]
-                bw_full = bw.reshape(shape)
+                bw_full = machine.bw_field(k)[None]
                 for arr in (pos[k], neg[k]):
                     data = np.maximum(data, arr.reshape(b, -1).max(axis=1))
                     lat = np.maximum(
@@ -296,11 +332,7 @@ def per_dim_stats(traffic: Traffic) -> dict:
     m = traffic.machine
     nd = m.ndim - m.core_dims
     for k in range(nd):
-        idx = np.arange(m.dims[k])
-        bw = m.bw(k, idx)
-        shape = [1] * m.ndim
-        shape[k] = m.dims[k]
-        bw_full = np.broadcast_to(np.asarray(bw).reshape(shape), m.dims)
+        bw_full = m.bw_field(k)
         for sign, arr in (("+", traffic.pos[k]), ("-", traffic.neg[k])):
             key = f"dim{k}{sign}"
             out[key] = {

@@ -1,0 +1,172 @@
+"""JAX scoring backend for the candidate search (accelerator path).
+
+Mirrors :func:`repro.core.metrics.evaluate_candidates` — vectorised
+hop metrics plus the batched dimension-ordered router — as one
+jit-compiled function so candidate scoring can run on the accelerator
+next to the repo's Pallas kernels:
+
+- the circular difference-array range-add of the router becomes a flat
+  ``jax.ops.segment_sum`` over ``row*(s+1)+col`` keys followed by a
+  per-row prefix sum (the same scatter-free formulation the numpy
+  backend uses through ``np.bincount``);
+- candidates are ``jax.vmap``-ped over the leading axis of the
+  coordinate stack, so one compiled program scores the whole sweep;
+- machine structure (dims / wrap / core-dim count) is static, so each
+  (machine, message-count) shape compiles once and is cached for the
+  repeated sweeps of the benchmarks.
+
+Numbers match the numpy backend within floating-point tolerance (the
+router sums in f32 on CPU/TPU defaults; tests/test_batched.py pins the
+parity).  This module imports jax at module level — callers go through
+``evaluate_candidates(backend="jax")``, which falls back to numpy when
+the import fails.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .machine import Machine
+
+
+def _circular_range_add(row, start, length, w, nrows, s):
+    """Segment-sum difference-array range-add: add ``w`` to the circular
+    interval [start, start+length) of each row's length-``s`` lane.
+    Column ``s`` is the dump bucket closing wrapped head intervals;
+    zero-length messages contribute exact zeros (static shapes — no
+    boolean compaction under jit)."""
+    base = row * (s + 1)
+    end = start + length
+    wz = jnp.where(length > 0, w, 0.0)
+    wrapped = end > s
+    wwr = jnp.where(wrapped, wz, 0.0)
+    idx = jnp.concatenate([
+        base + start,                         # open [start, ...)
+        base + jnp.minimum(end, s),           # close at end (or dump)
+        base,                                 # wrapped tail opens at 0
+        base + jnp.where(wrapped, end - s, 0),  # ... and closes at end-s
+    ])
+    val = jnp.concatenate([wz, -wz, wwr, -wwr])
+    diff = jax.ops.segment_sum(val, idx, num_segments=nrows * (s + 1))
+    return jnp.cumsum(diff.reshape(nrows, s + 1)[:, :s], axis=1)
+
+
+def _route_one(src, dst, w, dims, wrap, nd):
+    """Dimension-ordered routing of one candidate's messages; returns
+    per network dim the (+, -) link-load arrays of full machine shape.
+    Same traversal as ``metrics._batched_route`` (dim 0 first, shortest
+    direction on tori, core coords held at the source's)."""
+    pos, neg = [], []
+    cur = src
+    for k in range(nd):
+        s = dims[k]
+        a = cur[:, k]
+        b = dst[:, k]
+        if wrap[k]:
+            fwd = (b - a) % s
+            bwd = (a - b) % s
+            use_fwd = fwd <= bwd
+            len_f = jnp.where(use_fwd, fwd, 0)
+            len_b = jnp.where(use_fwd, 0, bwd)
+            start_b = (a - len_b) % s
+        else:
+            use_fwd = b >= a
+            len_f = jnp.where(use_fwd, b - a, 0)
+            len_b = jnp.where(use_fwd, 0, a - b)
+            start_b = a - len_b
+        row = jnp.zeros_like(a)
+        row_dims = tuple(d for j, d in enumerate(dims) if j != k)
+        for j in range(len(dims)):
+            if j != k:
+                row = row * dims[j] + cur[:, j]
+        nrows = 1
+        for d in row_dims:
+            nrows *= d
+        lane_p = _circular_range_add(row, a, len_f, w, nrows, s)
+        lane_n = _circular_range_add(row, start_b, len_b, w, nrows, s)
+        pos.append(jnp.moveaxis(lane_p.reshape(row_dims + (s,)), -1, k))
+        neg.append(jnp.moveaxis(lane_n.reshape(row_dims + (s,)), -1, k))
+        cur = cur.at[:, k].set(b)
+    return tuple(pos), tuple(neg)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dims", "wrap", "core_dims", "traffic"))
+def _score_chunk(src, dst, w, bw_fields, *, dims, wrap, core_dims, traffic):
+    nd = len(dims) - core_dims
+    hops = jnp.zeros(src.shape[:-1], dtype=jnp.int32)
+    for k in range(nd):
+        s = dims[k]
+        d = jnp.abs(src[..., k] - dst[..., k])
+        if wrap[k]:
+            d = jnp.minimum(d, s - d)
+        hops = hops + d
+    hf = hops.astype(jnp.float32)
+    out = {
+        "weighted_hops": (hf * w[None, :]).sum(axis=-1),
+        "total_hops": hops.sum(axis=-1),
+        "average_hops": hf.mean(axis=-1),
+    }
+    if traffic:
+        pos, neg = jax.vmap(
+            lambda s_, d_: _route_one(s_, d_, w, dims, wrap, nd))(src, dst)
+        nb = src.shape[0]
+        data = jnp.zeros(nb)
+        lat = jnp.zeros(nb)
+        for k in range(nd):
+            inv_bw = (1.0 / bw_fields[k])[None]
+            for arr in (pos[k], neg[k]):
+                data = jnp.maximum(data, arr.reshape(nb, -1).max(axis=1))
+                lat = jnp.maximum(
+                    lat, (arr * inv_bw).reshape(nb, -1).max(axis=1))
+        out["data_max"] = data
+        out["latency_max"] = lat
+    return out
+
+
+def evaluate_candidates_jax(machine: Machine, task_edges: np.ndarray,
+                            edge_weights: np.ndarray | None,
+                            coord_stack: np.ndarray, *,
+                            traffic: bool = False,
+                            chunk_elems: int = 1 << 24) -> dict:
+    """JAX implementation of ``evaluate_candidates`` (same contract,
+    same chunking; results within fp tolerance of the numpy backend)."""
+    coord_stack = np.asarray(coord_stack)
+    nb = len(coord_stack)
+    ne = len(task_edges)
+    out = {
+        "weighted_hops": np.zeros(nb),
+        "total_hops": np.zeros(nb, dtype=np.int64),
+        "average_hops": np.zeros(nb),
+    }
+    if traffic:
+        out["data_max"] = np.zeros(nb)
+        out["latency_max"] = np.zeros(nb)
+    if ne == 0 or nb == 0:
+        return out
+    nd = machine.ndim - machine.core_dims
+    dims = tuple(int(x) for x in machine.dims)
+    wrap = tuple(bool(x) for x in machine.wrap)
+    bw_fields = tuple(jnp.asarray(machine.bw_field(k), dtype=jnp.float32)
+                      for k in range(nd))
+    w = jnp.asarray(np.ones(ne) if edge_weights is None else edge_weights,
+                    dtype=jnp.float32)
+    per_cand = max(ne * machine.ndim, 1)
+    if traffic:
+        per_cand += 2 * nd * machine.nnodes
+    chunk = int(max(1, chunk_elems // per_cand))
+    for c0 in range(0, nb, chunk):
+        cs = coord_stack[c0:c0 + chunk]
+        src = jnp.asarray(cs[:, task_edges[:, 0]], dtype=jnp.int32)
+        dst = jnp.asarray(cs[:, task_edges[:, 1]], dtype=jnp.int32)
+        ev = _score_chunk(src, dst, w, bw_fields, dims=dims, wrap=wrap,
+                          core_dims=machine.core_dims, traffic=traffic)
+        sl = slice(c0, c0 + len(cs))
+        for key, arr in ev.items():
+            out[key][sl] = np.asarray(arr, dtype=out[key].dtype)
+    return out

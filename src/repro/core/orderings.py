@@ -115,6 +115,72 @@ def order_points(
         longest_dim=longest_dim, uneven_prime=uneven_prime)
 
 
+def order_points_batched(
+    coords: np.ndarray,
+    nparts: int,
+    sfc: str = "FZ",
+    *,
+    dim_orders: np.ndarray,
+    weights: np.ndarray | None = None,
+    longest_dim: bool = True,
+    uneven_prime: bool = False,
+    backend: str = "vectorized",
+) -> np.ndarray:
+    """Paper Algorithm 2 for a whole stack of dimension rotations at once.
+
+    The §4.3 rotation search evaluates many column permutations of the
+    SAME point cloud.  Permuting columns only changes which dimension
+    the cut-selection rule prefers — the cut values, weights and flips
+    are untouched — so rotation ``perm`` is exactly ``order_points(
+    coords, ..., dim_order=perm)``.  This entry point exploits that:
+    all B rotations run as outermost segments of ONE level-synchronous
+    engine pass (shared per-dimension presorts, one segment table),
+    instead of B Python-level ``order_points`` calls.
+
+    Parameters
+    ----------
+    coords : (n, d) float array, shared by every candidate.
+    nparts : target number of parts (same contract as ``order_points``).
+    sfc : one of ``Z | Gray | FZ | FZlow``.  Hilbert is rejected: its
+        index genuinely depends on the column order, so a rotation sweep
+        over "H" must permute the coordinates per candidate (the mapping
+        pipeline keeps the per-candidate loop for it).
+    dim_orders : (B, d) int array; row ``b`` is candidate ``b``'s
+        cut-dimension priority permutation (the rotation itself).
+    weights, longest_dim, uneven_prime : as in ``order_points``.
+    backend : ``"vectorized"`` runs the single batched engine pass;
+        ``"recursive"`` loops the reference recursion per row (the
+        cross-check oracle — slow, kept for equivalence tests).
+
+    Returns
+    -------
+    mu : (B, n) int64 part numbers.  Row ``b`` is bit-identical to both
+        ``order_points(coords, nparts, sfc, dim_order=dim_orders[b])``
+        and ``order_points(coords[:, dim_orders[b]], nparts, sfc)``
+        (asserted in tests/test_batched.py).
+    """
+    coords = np.asarray(coords, dtype=np.float64)
+    dim_orders = np.atleast_2d(np.asarray(dim_orders, dtype=np.int64))
+    if sfc == "H":
+        raise ValueError(
+            "order_points_batched cannot batch Hilbert: 'H' depends on "
+            "the column order itself, not just the cut priority")
+    if sfc not in SFC_KINDS:
+        raise ValueError(f"unknown sfc {sfc!r}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "recursive":
+        return np.stack([
+            order_points_recursive(
+                coords, nparts, sfc, weights=weights, dim_order=do,
+                longest_dim=longest_dim, uneven_prime=uneven_prime)
+            for do in dim_orders])
+    from .partition import vectorized_order_batched
+    return vectorized_order_batched(
+        coords, nparts, sfc, dim_orders=dim_orders, weights=weights,
+        longest_dim=longest_dim, uneven_prime=uneven_prime)
+
+
 def order_points_recursive(
     coords: np.ndarray,
     nparts: int,

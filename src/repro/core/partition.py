@@ -49,17 +49,28 @@ to the recursive reference (cross-checked in tests/test_partition.py):
     arbitrary tie structure; ~an order of magnitude slower than the
     fast engine but still free of per-part Python overhead.
 
+Both engines are *batched over rotation candidates*: the paper's §4.3
+rotation search only permutes the cut-dimension priority of the same
+point cloud, so B candidates run as B outermost segments of ONE
+level-synchronous sweep (:func:`vectorized_order_batched`).  The
+per-dimension presorts are computed once and shared by every candidate;
+the per-segment tables (sizes, part counts, flip signs, dim priorities)
+simply start with B rows instead of one.  A full rotation sweep thus
+costs one engine pass instead of B Python-level partitioner calls —
+the mapping pipeline's batched candidate sweep relies on this.
+
 Total fast-path work is O(d * n log n) for the initial sorts plus
-O(levels * n * d) for the sweeps; ``order_points`` through this engine
-is >=10x faster than the recursion at 2^18 points / 4096 parts (see the
-``partition`` entry of ``benchmarks/run.py``).
+O(levels * B * n * d) for the sweeps; ``order_points`` through this
+engine is >=10x faster than the recursion at 2^18 points / 4096 parts
+(see the ``partition`` entry of ``benchmarks/run.py``; the ``candidates``
+entry guards the batched-sweep speedup).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["vectorized_order"]
+__all__ = ["vectorized_order", "vectorized_order_batched"]
 
 
 # Ceiling for the padded per-segment cumsum buffer (entries).  Above it
@@ -93,12 +104,51 @@ def vectorized_order(
     n = len(coords)
     if nparts <= 1 or n == 0:
         return np.zeros(n, dtype=np.int64)
+    d = coords.shape[1]
+    dimo = (np.arange(d) if dim_order is None
+            else np.asarray(dim_order, dtype=np.int64))
     w = None if weights is None else np.asarray(weights, dtype=np.float64)
     try:
-        return _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
+        return _fast_order(coords, nparts, sfc, w, dimo[None], longest_dim,
+                           uneven_prime)[0]
+    except _TieFallback:
+        return _exact_order(coords, nparts, sfc, w, dimo[None], longest_dim,
+                            uneven_prime)[0]
+
+
+def vectorized_order_batched(
+    coords: np.ndarray,
+    nparts: int,
+    sfc: str,
+    *,
+    dim_orders: np.ndarray,
+    weights: np.ndarray | None = None,
+    longest_dim: bool = True,
+    uneven_prime: bool = False,
+) -> np.ndarray:
+    """Cut B rotation candidates of one point cloud in a single sweep.
+
+    ``dim_orders`` is a ``(B, d)`` stack of cut-dimension priority
+    permutations; row ``b`` of the returned ``(B, n)`` int64 array is
+    bit-identical to ``vectorized_order(coords, ..., dim_order=
+    dim_orders[b])`` — which in turn equals the partition of the
+    column-permuted cloud ``coords[:, dim_orders[b]]``.  Each candidate
+    is one outermost segment of the shared level-synchronous machinery,
+    so the whole batch costs one engine pass (shared presorts, one
+    segment table) instead of B separate calls.
+    """
+    coords = np.asarray(coords, dtype=np.float64)
+    dim_orders = np.atleast_2d(np.asarray(dim_orders, dtype=np.int64))
+    nb = len(dim_orders)
+    n = len(coords)
+    if nparts <= 1 or n == 0:
+        return np.zeros((nb, n), dtype=np.int64)
+    w = None if weights is None else np.asarray(weights, dtype=np.float64)
+    try:
+        return _fast_order(coords, nparts, sfc, w, dim_orders, longest_dim,
                            uneven_prime)
     except _TieFallback:
-        return _exact_order(coords, nparts, sfc, w, dim_order, longest_dim,
+        return _exact_order(coords, nparts, sfc, w, dim_orders, longest_dim,
                             uneven_prime)
 
 
@@ -123,22 +173,23 @@ def _split_counts_table(values: np.ndarray, uneven_prime: bool):
     return npl, npr
 
 
-def _pick_cut_dims(ext: np.ndarray, dim_order) -> np.ndarray:
+def _pick_cut_dims(ext: np.ndarray, sdo: np.ndarray) -> np.ndarray:
     """Longest-dim selection for all segments at once.  Replicates
-    ``orderings._longest_dim``: scan ``dim_order``, replacing the best
-    only on a strict ``> best + 1e-12`` improvement."""
+    ``orderings._longest_dim``: scan each segment's own priority row
+    ``sdo[s]``, replacing the best only on a strict ``> best + 1e-12``
+    improvement (per-segment rows because batched candidates carry
+    different rotation priorities).  One ``take_along_axis`` reorders
+    the extents into priority order so the scan runs on plain columns.
+    """
     nseg, d = ext.shape
-    if dim_order is None:
-        dim_order = np.arange(d)
-    first = int(dim_order[0])
-    best = np.full(nseg, first, dtype=np.int64)
-    best_ext = ext[:, first].copy()
-    for dd in dim_order:
-        dd = int(dd)
-        better = ext[:, dd] > best_ext + 1e-12
-        best[better] = dd
-        best_ext[better] = ext[better, dd]
-    return best
+    pri = np.take_along_axis(ext, sdo, axis=1)
+    best_p = np.zeros(nseg, dtype=np.int64)
+    best_ext = pri[:, 0].copy()
+    for p in range(1, d):
+        better = pri[:, p] > best_ext + 1e-12
+        best_p[better] = p
+        best_ext[better] = pri[better, p]
+    return np.take_along_axis(sdo, best_p[:, None], axis=1)[:, 0]
 
 
 def _uniform_cuts(sizes: np.ndarray, ratio: np.ndarray,
@@ -216,41 +267,65 @@ def _presort(col: np.ndarray) -> np.ndarray:
     return np.argsort(u)
 
 
-def _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
+def _fast_order(coords, nparts, sfc, w, dim_orders, longest_dim,
                 uneven_prime):
-    n, d = coords.shape
-    cols = np.ascontiguousarray(coords.T)  # (d, n) value lookups
-    cols_flat = cols.reshape(-1)
-    Q = np.empty((d, n), dtype=np.int64)
+    npts, d = coords.shape
+    if dim_orders is None:
+        dim_orders = np.arange(d, dtype=np.int64)[None]
+    nb = len(dim_orders)
+    N = nb * npts  # total rows: candidate b owns rows [b*npts, (b+1)*npts)
+    if N >= 1 << 31:  # int32 row ids bound the batch (no realistic input)
+        raise _TieFallback  # pragma: no cover - exact engine handles it
+    # (d, npts) coordinate values, SHARED by every candidate block.  Q
+    # stores BLOCK-LOCAL point ids (0..npts-1): values, weights and the
+    # first-child table are all indexed locally, so every per-point
+    # structure a block touches is candidate-sized and cache-resident
+    # however many candidates are stacked — the batched sweep pays no
+    # working-set blowup over B separate runs, it only saves.
+    cols1 = np.ascontiguousarray(coords.T)
+    cols1_flat = cols1.reshape(-1)
+    offs = np.arange(nb, dtype=np.int32) * npts
+    # int32 permutations: the gather/scatter passes over Q dominate the
+    # sweep and are memory-bound, so halving the index width ~halves the
+    # engine's DRAM traffic (the batched sweep works on nb*n rows)
+    Q = np.empty((d, N), dtype=np.int32)
     for j in range(d):
-        Q[j] = _presort(cols[j])
+        ps = _presort(cols1[j]).astype(np.int32)  # shared by every block
+        Q[j] = np.tile(ps, nb) if nb > 1 else ps
     q_buf = np.empty_like(Q) if d > 1 else Q  # partition double-buffer
+    g_loc = np.empty(npts, dtype=bool) if d > 1 else None  # per-block
+    loc = np.arange(npts, dtype=np.int32) if d > 1 else None
     pos = pos32 = None  # built lazily: unused on the pure-1D fast path
 
     def _positions():
         nonlocal pos, pos32
         if pos is None:
-            pos = np.arange(n, dtype=np.int64)
+            pos = np.arange(N, dtype=np.int64)
             pos32 = pos.astype(np.int32)
         return pos
 
-    cut_base = np.arange(1, n + 1, dtype=np.float64)
-    weighted = w is not None
-    dimo = np.arange(d) if dim_order is None else \
-        np.asarray(dim_order, dtype=np.int64)
+    cut_base = np.arange(1, npts + 1, dtype=np.float64)
+    weighted = w is not None  # w indexed by block-local ids: no tiling
 
-    # segment table (sorted by start); signs[s, j] = net flip of dim j;
-    # base[s] = part offset of the segment (mu is scattered once at end)
-    starts = np.array([0], dtype=np.int64)
-    sizes = np.array([n], dtype=np.int64)
-    pnum = np.array([nparts], dtype=np.int64)
-    base = np.array([0], dtype=np.int64)
-    signs = np.ones((1, d), dtype=np.int8)
+    # segment table (sorted by start; int32 throughout — the table is
+    # rebuilt every level and its traffic shows at deep levels);
+    # signs[s, j] = net flip of dim j; base[s] = part offset of the
+    # segment (mu is scattered once at end); sdo[s] = the segment's
+    # cut-dimension priority row (candidates of a batched sweep differ
+    # only here; children inherit their parent's row)
+    starts = offs.copy()
+    sizes = np.full(nb, npts, dtype=np.int32)
+    pnum = np.full(nb, nparts, dtype=np.int32)
+    base = np.zeros(nb, dtype=np.int32)
+    signs = np.ones((nb, d), dtype=np.int8)
+    sdo = np.ascontiguousarray(np.asarray(dim_orders, dtype=np.int64))
     level = 0
-    # permutation whose blocks match the FINAL table: after the last
-    # split only each block's own cut-dim row is split in place, so the
-    # closing scatter must read through that row's layout
-    final_pts = Q[0]
+    # ``pending``: when the final level's split was computed but never
+    # applied to the permutation rows, the closing scatter must read
+    # each candidate block through that level's cut layout (a block's
+    # own cut-dim row splits in place).  None = every row matches the
+    # final segment table.
+    pending = None
 
     while True:
         act = (pnum > 1) & (sizes > 1)
@@ -258,6 +333,16 @@ def _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
             break
         nseg = len(starts)
         ends = starts + sizes
+
+        # --- candidate blocks of the segment table ----------------------
+        # Each candidate's segments stay inside its contiguous row block
+        # [b*npts, (b+1)*npts); per-point work below runs per block, so
+        # every pass operates on cache-sized slices however many
+        # candidates are stacked.
+        if nb == 1:
+            seg_b = np.array([0, nseg])
+        else:
+            seg_b = np.append(np.searchsorted(starts, offs), nseg)
 
         # --- cut dimension ----------------------------------------------
         # Each block of Q[j] is ascending along dim j, so per-segment
@@ -270,23 +355,41 @@ def _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
             lo = np.empty((nseg, d))
             hi = np.empty((nseg, d))
             for j in range(d):
-                lo[:, j] = cols[j][Q[j, starts]]
-                hi[:, j] = cols[j][Q[j, ends - 1]]
-            cut = _pick_cut_dims(hi - lo, dimo)
+                lo[:, j] = cols1[j][Q[j, starts]]
+                hi[:, j] = cols1[j][Q[j, ends - 1]]
+            cut = _pick_cut_dims(hi - lo, sdo)
             sgn = signs[np.arange(nseg), cut]
         else:
-            cut = np.full(nseg, int(dimo[level % d]), dtype=np.int64)
+            cut = sdo[:, level % d]  # never mutated: view is fine
             sgn = signs[np.arange(nseg), cut]
         one_dim = d == 1 or (cut[act] == cut[act][0]).all()
         c0 = int(cut[act][0])
 
+        # per-block uniform cut dim over the ACTIVE segments (-1 = no
+        # active segment in the block, -2 = mixed cut dims)
+        if d > 1:
+            blocks = []
+            for bi in range(nb):
+                s0, s1 = int(seg_b[bi]), int(seg_b[bi + 1])
+                a_sl = act[s0:s1]
+                if not a_sl.any():
+                    u = -1
+                else:
+                    cb = cut[s0:s1][a_sl]
+                    u = int(cb[0]) if (cb == cb[0]).all() else -2
+                blocks.append((bi * npts, (bi + 1) * npts, s0, s1, u))
+
         # --- split counts + cut index k (in reference visit order) ------
-        npl, npr = _split_counts_table(np.where(act, pnum, 0), uneven_prime)
+        if uneven_prime:
+            npl, npr = _split_counts_table(np.where(act, pnum, 0), True)
+        else:  # plain bisection: no table walk needed
+            npl = np.where(act, pnum >> 1, 0)
+            npr = np.where(act, pnum - (pnum >> 1), 0)
         ratio = np.where(act, npl / np.maximum(pnum, 1), 0.0)
-        if not one_dim:
+        if weighted and not one_dim:
             cut_pt = np.repeat(cut, sizes)
         if not weighted:
-            k = _uniform_cuts(sizes, ratio, cut_base)
+            k = _uniform_cuts(sizes, ratio, cut_base).astype(np.int32)
         else:
             # weight sequence in reference order: ascending block for
             # sign +1, descending for sign -1 (no ties on this path)
@@ -298,11 +401,11 @@ def _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
             if one_dim:
                 w_seq = w[Q[c0, asc]]
             else:
-                w_seq = w[Q.reshape(-1)[cut_pt * n + asc]]
+                w_seq = w[Q.reshape(-1)[cut_pt * N + asc]]
             blk = np.repeat(np.arange(nseg), sizes)
             ab = act[blk]
             a_sz = sizes[act]
-            k = np.ones(nseg, dtype=np.int64)
+            k = np.ones(nseg, dtype=np.int32)
             k[act] = _padded_cuts(w_seq[ab], np.cumsum(a_sz) - a_sz, a_sz,
                                   ratio[act])
         # first child block holds kappa points: the reference's left
@@ -315,10 +418,10 @@ def _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
             # any tie inside an active block reorders the weight cumsum;
             # compare adjacent sorted values per active block
             if one_dim:
-                v_blk = cols[c0][Q[c0]]
+                v_blk = cols1[c0][Q[c0]]
             else:
-                v_blk = cols_flat[cut_pt * n +
-                                  Q.reshape(-1)[cut_pt * n + _positions()]]
+                qg = Q.reshape(-1)[cut_pt * N + _positions()]
+                v_blk = cols1_flat[cut_pt * npts + qg]
             same = (blk[1:] == blk[:-1]) & ab[:-1]
             if (same & (v_blk[1:] == v_blk[:-1])).any():
                 raise _TieFallback
@@ -326,9 +429,10 @@ def _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
             b0 = starts[a] + kappa[a] - 1
             b1 = b0 + 1
             ca = cut[a]
-            q0 = Q.reshape(-1)[ca * n + b0]
-            q1 = Q.reshape(-1)[ca * n + b1]
-            if (cols_flat[ca * n + q0] == cols_flat[ca * n + q1]).any():
+            q0 = Q.reshape(-1)[ca * N + b0]  # block-local point ids
+            q1 = Q.reshape(-1)[ca * N + b1]
+            if (cols1_flat[ca * npts + q0]
+                    == cols1_flat[ca * npts + q1]).any():
                 raise _TieFallback
 
         # --- next level's segment table (mu deferred via base) ----------
@@ -345,6 +449,7 @@ def _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
         new_pnum = np.stack([p1, p2], axis=1).reshape(-1)
         new_base = np.stack([b1_, b2_], axis=1).reshape(-1)
         new_signs = np.repeat(signs, 2, axis=0)
+        new_sdo = np.repeat(sdo, 2, axis=0)
         if sfc in ("Gray", "FZ", "FZlow"):
             # reference-right child = second block for sign +1, first
             # block for sign -1; FZlow flips the reference-LEFT child
@@ -356,77 +461,119 @@ def _fast_order(coords, nparts, sfc, w, dim_order, longest_dim,
             else:
                 new_signs[rows, cut[act]] = -new_signs[rows, cut[act]]
         keep = new_sizes > 0
-        starts = new_starts[keep]
-        sizes = new_sizes[keep]
-        pnum = new_pnum[keep]
-        base = new_base[keep]
-        signs = new_signs[keep]
+        if keep.all():  # common case: every active split fills both sides
+            starts, sizes, pnum = new_starts, new_sizes, new_pnum
+            base, signs, sdo = new_base, new_signs, new_sdo
+        else:
+            starts = new_starts[keep]
+            sizes = new_sizes[keep]
+            pnum = new_pnum[keep]
+            base = new_base[keep]
+            signs = new_signs[keep]
+            sdo = new_sdo[keep]
         level += 1
 
         if not ((pnum > 1) & (sizes > 1)).any():
-            final_pts = Q[c0] if one_dim else \
-                Q.reshape(-1)[cut_pt * n + _positions()]
+            if d > 1:
+                pending = (blocks, cut, prev_sizes)
             break
         if d == 1:
-            final_pts = Q[0]
             continue  # blocks of the only dim split in place
 
         # --- apply the splits to the other dims' permutations -----------
-        # Stable partition per dim: each block's first-child members move
-        # to the front, second-child members to the back, both in block
-        # order, so every block stays value-sorted.  The cut dim's own
-        # blocks split in place (its partition is the identity), so when
-        # all active segments cut the same dim that row is skipped.
-        thr_pt = np.repeat(prev_starts + kappa, prev_sizes)
-        g_pos = _positions() < thr_pt  # True = first child block
-        g_pt = np.empty(n, dtype=bool)
-        if one_dim:
-            g_pt[Q[c0]] = g_pos
-        else:
-            g_pt[Q.reshape(-1)[cut_pt * n + pos]] = g_pos
-        for j in range(d):
-            if one_dim and j == c0:
-                q_buf[j] = Q[j]
+        # Stable partition per dim, per candidate block: each segment's
+        # first-child members move to the front, second-child members to
+        # the back, both in block order, so every segment stays
+        # value-sorted.  A block's own cut-dim row splits in place (its
+        # partition is the identity), so that row is just copied.  The
+        # first-child table ``g_loc`` is block-local and reused block to
+        # block, so the whole inner loop runs on candidate-sized arrays.
+        for r0, r1, s0, s1, u in blocks:
+            if u == -1:  # no active segment: rows already match
+                q_buf[:, r0:r1] = Q[:, r0:r1]
                 continue
-            G = g_pt[Q[j]]
-            T = np.cumsum(G, dtype=np.int32)
-            np.subtract(T, G, out=T, casting="unsafe")
-            c_ex = T[prev_starts]  # trues before each block
-            # dest_first = T + (start - c_ex);  dest_second = pos +
-            # (kappa + c_ex) - T   (both per point, derived from the
-            # running count of first-child members)
-            a_pt = np.repeat(
-                (prev_starts - c_ex).astype(np.int32), prev_sizes)
-            b_pt = np.repeat(
-                (kappa + c_ex).astype(np.int32), prev_sizes)
-            b_pt += pos32
-            b_pt -= T
-            T += a_pt
-            dest = np.where(G, T, b_pt)
-            q_buf[j][dest] = Q[j]
+            thr = np.repeat(prev_starts[s0:s1] + kappa[s0:s1] - r0,
+                            prev_sizes[s0:s1])
+            g_sl = loc < thr  # first-child membership by local position
+            if u >= 0:
+                g_loc[Q[u, r0:r1]] = g_sl
+            else:
+                cp = np.repeat(cut[s0:s1], prev_sizes[s0:s1])
+                flat = cp * N
+                flat += np.arange(r0, r1, dtype=np.int64)
+                g_loc[Q.reshape(-1)[flat]] = g_sl
+            bs = prev_starts[s0:s1] - r0
+            szs = prev_sizes[s0:s1]
+            kp = kappa[s0:s1]
+            # Positions [0, bs) of EVERY row hold the points of the
+            # earlier segments (rows share the segment blocks, only the
+            # order within differs), so the first-child count before a
+            # segment is the row-independent exclusive cumsum of kappa
+            # — both destination offsets hoist out of the dim loop:
+            # dest_first = T + (start - c_ex);  dest_second = local +
+            # (kappa + c_ex) - T, with T the row's first-child prefix.
+            c_ex = np.cumsum(kp, dtype=np.int32) - kp
+            a_pt = np.repeat(bs - c_ex, szs)
+            b_pt = np.repeat(kp + c_ex, szs)
+            b_pt += loc
+            for j in range(d):
+                if u == j:
+                    q_buf[j, r0:r1] = Q[j, r0:r1]
+                    continue
+                Qj = Q[j, r0:r1]
+                G = g_loc[Qj]
+                T = np.empty(npts, dtype=np.int32)  # exclusive prefix of G
+                T[0] = 0
+                np.cumsum(G[:-1], dtype=np.int32, out=T[1:])
+                d2 = b_pt - T
+                T += a_pt
+                np.logical_not(G, out=G)
+                np.copyto(T, d2, where=G)  # T becomes dest in place
+                q_buf[j, r0:r1][T] = Qj
         Q, q_buf = q_buf, Q
-        final_pts = Q[0]
 
-    mu = np.empty(n, dtype=np.int32)  # nparts <= n < 2^31
-    mu[final_pts] = np.repeat(base.astype(np.int32), sizes)
-    return mu.astype(np.int64)
+    mu = np.empty(N, dtype=np.int32)  # nparts <= npts, N < 2^31
+    vals = np.repeat(base.astype(np.int32), sizes)
+    if pending is None:  # every row matches the final table
+        for bi in range(nb):
+            r0 = bi * npts
+            mu[r0:r0 + npts][Q[0, r0:r0 + npts]] = vals[r0:r0 + npts]
+    else:
+        blocks, cut, prev_sizes = pending
+        for r0, r1, s0, s1, u in blocks:
+            if u == -2:
+                cp = np.repeat(cut[s0:s1], prev_sizes[s0:s1])
+                flat = cp * N
+                flat += np.arange(r0, r1, dtype=np.int64)
+                mu[r0:r1][Q.reshape(-1)[flat]] = vals[r0:r1]
+            else:  # untouched block or uniform cut: one row matches
+                mu[r0:r1][Q[max(u, 0), r0:r1]] = vals[r0:r1]
+    return mu.astype(np.int64).reshape(nb, npts)
 
 
 # ---------------------------------------------------------------------------
 # exact engine: one segmented lexsort per level, materialised flips
 # ---------------------------------------------------------------------------
 
-def _exact_order(coords, nparts, sfc, w, dim_order, longest_dim,
+def _exact_order(coords, nparts, sfc, w, dim_orders, longest_dim,
                  uneven_prime):
-    coords = coords.copy()
-    n, d = coords.shape
-    mu = np.zeros(n, dtype=np.int64)
+    npts, d = coords.shape
+    if dim_orders is None:
+        dim_orders = np.arange(d, dtype=np.int64)[None]
+    nb = len(dim_orders)
+    # candidates flip coordinates independently -> each owns a copy
+    coords = np.tile(coords, (nb, 1)) if nb > 1 else coords.copy()
+    N = nb * npts
+    mu = np.zeros(N, dtype=np.int64)
     weighted = w is not None
+    if weighted and nb > 1:
+        w = np.tile(w, nb)
 
-    order = np.arange(n)
-    starts = np.array([0], dtype=np.int64)
-    sizes = np.array([n], dtype=np.int64)
-    seg_np = np.array([nparts], dtype=np.int64)
+    order = np.arange(N)
+    starts = np.arange(nb, dtype=np.int64) * npts
+    sizes = np.full(nb, npts, dtype=np.int64)
+    seg_np = np.full(nb, nparts, dtype=np.int64)
+    sdo = np.ascontiguousarray(np.asarray(dim_orders, dtype=np.int64))
     level = 0
 
     while True:
@@ -442,10 +589,9 @@ def _exact_order(coords, nparts, sfc, w, dim_order, longest_dim,
             vals = coords[order]
             hi = np.maximum.reduceat(vals, starts, axis=0)
             lo = np.minimum.reduceat(vals, starts, axis=0)
-            cut = _pick_cut_dims(hi - lo, dim_order)[active]
+            cut = _pick_cut_dims(hi - lo, sdo)[active]
         else:
-            od = dim_order if dim_order is not None else np.arange(d)
-            cut = np.full(len(a_starts), int(od[level % d]), dtype=np.int64)
+            cut = sdo[active][:, level % d].copy()
 
         # active-point positions (a union of contiguous blocks of order)
         p_starts = np.cumsum(a_sizes) - a_sizes  # packed per-segment starts
@@ -485,11 +631,14 @@ def _exact_order(coords, nparts, sfc, w, dim_order, longest_dim,
         mu[r_pts] += npl[seg_of[right]]
 
         # --- next level's segment table ---------------------------------
+        a_sdo = sdo[active]
         starts = np.concatenate([starts[~active], a_starts, a_starts + k])
         sizes = np.concatenate([sizes[~active], k, a_sizes - k])
         seg_np = np.concatenate([seg_np[~active], npl, npr])
+        sdo = np.concatenate([sdo[~active], a_sdo, a_sdo])
         srt = np.argsort(starts, kind="stable")
         starts, sizes, seg_np = starts[srt], sizes[srt], seg_np[srt]
+        sdo = sdo[srt]
         level += 1
 
-    return mu
+    return mu.reshape(nb, npts)

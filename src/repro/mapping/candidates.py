@@ -47,14 +47,37 @@ class Candidate:
 
 def rotation_candidates(td: int, pd: int, rotations: int) -> list[Candidate]:
     """The paper's td! x pd! rotation search, subsampled to ``rotations``
-    evenly spaced entries (index 0 — the identity rotation — is always
-    kept).  ``rotations == 0`` means identity only."""
+    entries (index 0 — the identity rotation — is always kept).
+    ``rotations == 0`` means identity only.
+
+    Subsampling uses a balanced factorial design: the smallest
+    ``na x nb`` grid of evenly spaced task-side and proc-side
+    permutations whose product covers the budget.  Compared to a flat
+    ``linspace`` over the pair list this spreads the budget evenly over
+    BOTH factors of the search space, and it minimises the number of
+    UNIQUE per-side rotations — exactly the quantity the batched
+    rotation sweep partitions (one engine segment per unique
+    permutation), so a budget of B candidates costs ~``2*sqrt(B)``
+    partition-equivalents instead of ~``2*B``.
+    """
     if not rotations:
         return [Candidate()]
-    combos = [(a, b) for a in permutations(td) for b in permutations(pd)]
-    if len(combos) > rotations:
-        sel = np.linspace(0, len(combos) - 1, rotations).astype(int)
-        combos = [combos[i] for i in sel]
+    ta, pa = permutations(td), permutations(pd)
+    if len(ta) * len(pa) <= rotations:
+        combos = [(a, b) for a in ta for b in pa]
+    else:
+        best = None
+        for na in range(1, len(ta) + 1):
+            nb = min(-(-rotations // na), len(pa))  # ceil division
+            if na * nb < rotations:
+                continue
+            key = (na + nb, abs(na - nb))  # smallest grid, then balanced
+            if best is None or key < best[0]:
+                best = (key, na, nb)
+        _, na, nb = best
+        sa = [ta[i] for i in np.linspace(0, len(ta) - 1, na).astype(int)]
+        sb = [pa[i] for i in np.linspace(0, len(pa) - 1, nb).astype(int)]
+        combos = [(a, b) for a in sa for b in sb][:rotations]
     return [Candidate(task_perm=a, proc_perm=b, label=f"rot{i}")
             for i, (a, b) in enumerate(combos)]
 
@@ -67,11 +90,15 @@ class CandidateSearch:
         ``("latency_max", "weighted_hops")`` for the TPU mesh builder).
         Ties keep the EARLIER candidate, so listing the identity /
         default mapping first guarantees never-worse-than-default.
+    backend : scoring engine — ``"numpy"`` (default, bit-exact
+        reference) or ``"jax"`` (jit-compiled accelerator path; falls
+        back to numpy when jax is unavailable).
     """
 
-    def __init__(self, objective="weighted_hops"):
+    def __init__(self, objective="weighted_hops", backend="numpy"):
         self.objective = (objective,) if isinstance(objective, str) \
             else tuple(objective)
+        self.backend = backend
 
     @property
     def needs_traffic(self) -> bool:
@@ -87,14 +114,18 @@ class CandidateSearch:
             [alloc.coords[r.task_to_proc] for r in results])
         ev = evaluate_candidates(
             alloc.machine, graph.edges, graph.weights, coord_stack,
-            traffic=self.needs_traffic)
+            traffic=self.needs_traffic, backend=self.backend)
         return np.stack([ev[k] for k in self.objective], axis=1)
 
     def best(self, graph, alloc, results):
-        """(winner, winner_index, scores); first-of-ties wins."""
+        """(winner, winner_index, scores); first-of-ties wins.
+
+        One stable ``np.lexsort`` over the objective columns (last key
+        is most significant, so the columns go in reversed) — stability
+        keeps the FIRST index among equal scores, preserving the
+        never-worse-than-default guarantee.
+        """
         scores = self.score(graph, alloc, results)
-        best_i = 0
-        for i in range(1, len(results)):
-            if tuple(scores[i]) < tuple(scores[best_i]):
-                best_i = i
+        keys = tuple(scores[:, j] for j in reversed(range(scores.shape[1])))
+        best_i = int(np.lexsort(keys)[0])
         return results[best_i], best_i, scores

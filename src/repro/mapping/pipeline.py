@@ -10,8 +10,14 @@
 - :meth:`map_candidate` runs one geometric mapping (Algorithm 1) for a
   single rotation/scaling candidate through the level-synchronous
   vectorised partitioner (``backend`` selects the engine);
+- :meth:`map_candidates` runs a WHOLE rotation sweep in ~2 batched
+  engine passes (``sweep="batched"``, the default): the unique task and
+  processor dimension permutations become outermost segments of one
+  ``order_points_batched`` call per side, bit-identical to the
+  per-candidate loop (``sweep="loop"``, kept as the oracle);
 - :meth:`map` enumerates the rotation candidates and scores them with
-  the batched :class:`repro.mapping.candidates.CandidateSearch`.
+  the batched :class:`repro.mapping.candidates.CandidateSearch`
+  (``score_backend`` selects numpy or the jit-compiled JAX scorer).
 
 ``core.mapping.Mapper`` and ``meshmap.select_mapping`` are thin
 adapters over this class; benchmarks therefore all route through one
@@ -27,7 +33,7 @@ import numpy as np
 from repro.core.kmeans import closest_subset
 from repro.core.machine import Allocation
 from repro.core.mapping import MappingResult, match_parts
-from repro.core.orderings import order_points
+from repro.core.orderings import order_points, order_points_batched
 from repro.core.transforms import (apply_permutation, box_lift, drop_dims,
                                    scale_by_bandwidth, shift_torus)
 from repro.mapping.candidates import CandidateSearch, rotation_candidates
@@ -57,6 +63,15 @@ class PipelineConfig:
                   (task_perm, proc_perm) pairs evaluated.
       objective : metric key (or tuple, lexicographic) minimised by the
                   search; "weighted_hops" is the paper's choice.
+      sweep     : "batched" partitions every rotation of a sweep in ~2
+                  engine passes (one task-side, one proc-side batched
+                  ``order_points_batched`` call over the UNIQUE
+                  permutations of each side); "loop" runs
+                  ``map_candidate`` per candidate — the bit-identical
+                  oracle the ``candidates`` benchmark times against.
+      score_backend : candidate scoring engine, "numpy" (default) or
+                  "jax" (jit-compiled; silent numpy fallback when jax
+                  is unavailable).
     """
 
     sfc: str = "FZ"
@@ -71,6 +86,8 @@ class PipelineConfig:
     longest_dim: bool = True
     backend: str = "vectorized"
     objective: str | tuple = "weighted_hops"
+    sweep: str = "batched"
+    score_backend: str = "numpy"
 
 
 class MappingPipeline:
@@ -78,7 +95,8 @@ class MappingPipeline:
 
     def __init__(self, config: PipelineConfig | None = None):
         self.config = config or PipelineConfig()
-        self.search = CandidateSearch(self.config.objective)
+        self.search = CandidateSearch(self.config.objective,
+                                      backend=self.config.score_backend)
 
     # -- stage 1: machine transforms ------------------------------------
 
@@ -111,6 +129,17 @@ class MappingPipeline:
 
     # -- stages 2+3: partition + match for ONE candidate -----------------
 
+    def _sfc_pair(self, td: int, pd: int) -> tuple[str, str]:
+        """(task_sfc, proc_sfc) with the MFZ task-side variant when the
+        processor dimensionality is a multiple of the task's."""
+        cfg = self.config
+        use_mfz = (cfg.mfz is True) or (
+            cfg.mfz == "auto" and cfg.sfc == "FZ" and pd != td
+            and pd % max(td, 1) == 0)
+        if use_mfz:
+            return "FZlow", "FZ"  # MFZ: flip the LOW half, smaller side
+        return cfg.sfc, cfg.sfc
+
     def map_candidate(
         self,
         task_coords: np.ndarray,
@@ -137,14 +166,7 @@ class MappingPipeline:
             pc = pc[subset]
             pnum = tnum
         np_parts = min(tnum, pnum)
-
-        task_sfc = proc_sfc = cfg.sfc
-        use_mfz = (cfg.mfz is True) or (
-            cfg.mfz == "auto" and cfg.sfc == "FZ" and pd != td
-            and pd % max(td, 1) == 0)
-        if use_mfz:
-            task_sfc = "FZlow"  # MFZ: flip the LOW half, smaller-dim side
-            proc_sfc = "FZ"
+        task_sfc, proc_sfc = self._sfc_pair(td, pd)
 
         mu_t = order_points(tc, np_parts, task_sfc, weights=task_weights,
                             longest_dim=cfg.longest_dim,
@@ -160,23 +182,104 @@ class MappingPipeline:
         return MappingResult(t2p, rotation=(tuple(task_perm or ()),
                                             tuple(proc_perm or ())))
 
+    # -- stages 2+3 for a WHOLE rotation sweep ---------------------------
+
+    def map_candidates(
+        self,
+        task_coords: np.ndarray,
+        proc_coords: np.ndarray,
+        cands,
+        *,
+        task_weights: np.ndarray | None = None,
+    ) -> list:
+        """Algorithm 1 for every rotation candidate of a sweep.
+
+        A rotation only permutes the columns of one shared point cloud,
+        which is equivalent to permuting the partitioner's cut-dimension
+        priority (``dim_order``) over the un-permuted cloud.  The
+        batched sweep therefore partitions the UNIQUE task-side and
+        proc-side permutations in one ``order_points_batched`` call per
+        side — ~2 engine passes for the whole sweep — and assembles the
+        per-candidate ``task_to_proc`` arrays with one vectorised
+        part-matching gather.  Results are bit-identical to the
+        ``sweep="loop"`` per-candidate path (guarded by the
+        ``candidates`` benchmark and tests/test_batched.py).
+
+        Falls back to the loop for configurations the dim-order identity
+        cannot express: Hilbert numbering (depends on the column order
+        itself) and the tnum < pnum closest-subset case (the subset's
+        centroid iteration sums coordinates in column order).
+        """
+        cfg = self.config
+        tc = np.asarray(task_coords, dtype=np.float64)
+        pc = np.asarray(proc_coords, dtype=np.float64)
+        (tnum, td), (pnum, pd) = tc.shape, pc.shape
+        if (cfg.sweep == "loop" or len(cands) == 1 or cfg.sfc == "H"
+                or tnum < pnum):
+            return [
+                self.map_candidate(tc, pc, task_weights=task_weights,
+                                   task_perm=c.task_perm,
+                                   proc_perm=c.proc_perm)
+                for c in cands
+            ]
+        if cfg.sweep != "batched":
+            raise ValueError(f"unknown sweep mode {cfg.sweep!r}")
+
+        np_parts = min(tnum, pnum)
+        task_sfc, proc_sfc = self._sfc_pair(td, pd)
+
+        # dedup each side: many (task_perm, proc_perm) pairs share a perm
+        t_perms = [tuple(c.task_perm) if c.task_perm is not None
+                   else tuple(range(td)) for c in cands]
+        p_perms = [tuple(c.proc_perm) if c.proc_perm is not None
+                   else tuple(range(pd)) for c in cands]
+        ut = sorted(set(t_perms))
+        up = sorted(set(p_perms))
+        t_of = {p: i for i, p in enumerate(ut)}
+        p_of = {p: i for i, p in enumerate(up)}
+
+        common = dict(longest_dim=cfg.longest_dim,
+                      uneven_prime=cfg.uneven_prime, backend=cfg.backend)
+        mu_t = order_points_batched(tc, np_parts, task_sfc,
+                                    dim_orders=np.array(ut),
+                                    weights=task_weights, **common)
+        mu_p = order_points_batched(pc, np_parts, proc_sfc,
+                                    dim_orders=np.array(up), **common)
+
+        # vectorised GETMAPPINGARRAYS: part -> processor per proc rotation
+        # (pnum == np_parts here, so every part holds exactly one proc);
+        # int32 keeps the per-candidate assembly gathers cache-friendly
+        part_to_proc = np.full((len(up), np_parts), -1, dtype=np.int32)
+        part_to_proc[np.arange(len(up))[:, None], mu_p] = \
+            np.arange(pnum, dtype=np.int32)[None, :]
+        if (part_to_proc < 0).any():
+            missing = np.flatnonzero((part_to_proc < 0).any(axis=0))
+            raise ValueError(f"parts with no processor: {missing[:5]}")
+        mu_t = mu_t.astype(np.int32)
+
+        return [
+            MappingResult(
+                part_to_proc[p_of[pp]][mu_t[t_of[tp]]],
+                rotation=(tuple(c.task_perm or ()),
+                          tuple(c.proc_perm or ())))
+            for c, tp, pp in zip(cands, t_perms, p_perms)
+        ]
+
     # -- stage 4: candidate search ---------------------------------------
 
     def map(self, graph, alloc: Allocation,
             task_coords: np.ndarray | None = None,
             task_weights: np.ndarray | None = None) -> MappingResult:
-        """Full pipeline: transforms, rotation candidates, batched
-        scoring; returns the best MappingResult (score = objective)."""
+        """Full pipeline: transforms, one batched rotation sweep through
+        the partitioner, batched scoring; returns the best MappingResult
+        (score = objective)."""
         cfg = self.config
         pc = self.machine_coords(alloc)
         tc = np.asarray(task_coords if task_coords is not None
                         else graph.coords, dtype=np.float64)
         cands = rotation_candidates(tc.shape[1], pc.shape[1], cfg.rotations)
-        results = [
-            self.map_candidate(tc, pc, task_weights=task_weights,
-                               task_perm=c.task_perm, proc_perm=c.proc_perm)
-            for c in cands
-        ]
+        results = self.map_candidates(tc, pc, cands,
+                                      task_weights=task_weights)
         if len(results) == 1:
             return results[0]
         best, best_i, scores = self.search.best(graph, alloc, results)

@@ -57,7 +57,8 @@ def device_coords(devices, machine) -> np.ndarray:
 
 def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
                   *, devices=None, machine=None, axis_bytes=None,
-                  rotations: int = 8, return_report: bool = False):
+                  rotations: int = 16, return_report: bool = False,
+                  score_backend: str = "numpy"):
     """Build a Mesh whose device order minimises modeled link traffic.
 
     Candidate-selection (the paper's §4.3 rotation search, generalised):
@@ -87,7 +88,7 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
     graph = logical_mesh_graph(axis_sizes, tuple(ab), tuple(axis_names))
     alloc = Allocation(machine, device_coords(devices, machine).astype(int))
     best, best_metrics, base_metrics = select_mapping(
-        graph, alloc, ab, rotations=rotations)
+        graph, alloc, ab, rotations=rotations, score_backend=score_backend)
     order = best.task_to_proc  # logical flat index -> device index
     dev_array = np.array(devices, dtype=object)[order].reshape(axis_sizes)
     mesh = Mesh(dev_array, tuple(axis_names))
@@ -96,18 +97,21 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
     return mesh, {"mapped": best_metrics, "default": base_metrics}
 
 
-def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 8):
+def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
+                   score_backend: str = "numpy"):
     """Candidate search: default order + FZ mappings under raw and
     traffic-scaled task coordinates x rotations; returns
     (best MappingResult, best metrics, default metrics).
 
     Candidate generation and scoring both run through the unified
     ``repro.mapping`` pipeline: each (scaling, rotation-budget) entry is
-    one ``MappingPipeline.map`` call (whose internal rotation search is
-    the paper's WeightedHops objective), and the outer selection scores
-    every candidate in one batched (Latency(M), WeightedHops) pass.
-    The identity/default mapping is listed first, so on ties the search
-    is never worse than jax's enumeration order.
+    one ``MappingPipeline.map`` call whose internal rotation search —
+    the paper's WeightedHops objective — partitions the whole sweep in
+    ~2 batched engine passes, and the outer selection scores every
+    candidate in one batched (Latency(M), WeightedHops) pass
+    (``score_backend="jax"`` routes it through the jit-compiled
+    scorer).  The identity/default mapping is listed first, so on ties
+    the search is never worse than jax's enumeration order.
     """
     candidates = [identity_mapping(graph, alloc)]
     for scaled in (False, True):
@@ -116,9 +120,11 @@ def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 8):
             tc = tc / np.asarray(axis_bytes, dtype=float)
         for rot in (0, rotations):
             pipe = MappingPipeline(PipelineConfig(
-                sfc="FZ", shift=True, bandwidth_scale=True, rotations=rot))
+                sfc="FZ", shift=True, bandwidth_scale=True, rotations=rot,
+                score_backend=score_backend))
             candidates.append(pipe.map(graph, alloc, task_coords=tc))
-    search = CandidateSearch(objective=("latency_max", "weighted_hops"))
+    search = CandidateSearch(objective=("latency_max", "weighted_hops"),
+                             backend=score_backend)
     best, _, _ = search.best(graph, alloc, candidates)
     best_metrics = evaluate(graph, alloc, best)
     base_metrics = evaluate(graph, alloc, candidates[0])
