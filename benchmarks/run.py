@@ -11,6 +11,12 @@ trajectory.
   candidates       : batched rotation sweep vs the per-candidate loop
                      oracle (2^16 tasks / 24 rotations) with a winner
                      bit-identity check and a speedup smoke guard
+  hier             : flat vs hierarchical (coarsen->map->refine) engine
+                     on sparse XK7 scenarios — records the flat-vs-hier
+                     wall-clock ratio, the ~cores_per_node x engine-pass
+                     point reduction, and the quality ratios in the
+                     JSON bench trajectory; asserts quality within 5%,
+                     monotone refinement and the >=4x speedup floor
   table1_orderings : paper Table 1  (AverageHops of H/Z/FZ/MFZ)
   minighost        : paper Figs. 13-15 (weak scaling, sparse Gemini)
   homme_bgq        : paper Table 2 + Figs. 8-9 (BG/Q 5D torus)
@@ -20,6 +26,11 @@ trajectory.
 
 ``--full`` runs the complete Table 1 (up to 2^20-point rows, ~4 min) and
 all scaling points; the default caps sizes for a fast harness pass.
+``--smoke`` shrinks the perf-guarded entries to tiny sizes and drops
+their speedup floors (constant overheads dominate there) while still
+executing every equivalence/quality oracle — the mode CI runs on every
+PR for the ``hier`` and ``candidates`` entries.  ``--only`` accepts a
+comma-separated list of entry names.
 """
 
 import argparse
@@ -84,13 +95,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="run full-size Table 1 and all scaling points")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, oracles only (no speedup floors)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names to run")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the results as machine-readable JSON")
     args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (homme_bgq, homme_titan, mapping_tpu, minighost,
-                            roofline, table1_orderings)
+    from benchmarks import (hier, homme_bgq, homme_titan, mapping_tpu,
+                            minighost, roofline, table1_orderings)
 
     def partition_bench():
         """Vectorised level-synchronous engine vs recursive reference.
@@ -156,14 +171,21 @@ def main() -> None:
         from repro.mapping import MappingPipeline, PipelineConfig
         from repro.mapping.candidates import rotation_candidates
 
-        n, rotations = 1 << 16, 24
         # The ISSUE-2 claim (>=5x at this size) is asserted in --full;
-        # the smoke floor is lowered to 4x purely for scheduling noise,
-        # mirroring the partition bench's 4x-smoke / 10x-full pattern.
-        floor = 5.0 if args.full else 4.0
+        # the default floor is lowered to 4x purely for scheduling
+        # noise, mirroring the partition bench's 4x/10x pattern.
+        # --smoke shrinks to 2^12 tasks and drops the floor entirely
+        # (constant overheads dominate): only the bit-identity oracles
+        # between the batched sweep and the loop run there.
+        if args.smoke:
+            n, rotations, floor = 1 << 12, 24, None
+            graph = stencil_graph((16, 16, 16), torus=False)
+        else:
+            n, rotations = 1 << 16, 24
+            floor = 5.0 if args.full else 4.0
+            graph = stencil_graph((64, 32, 32), torus=False)
         machine = make_machine((16, 16, 16), wrap=True)
         alloc = block_allocation(machine)
-        graph = stencil_graph((64, 32, 32), torus=False)
         tc = graph.coords.astype(np.float64)
         cands = rotation_candidates(3, 3, rotations)
         assert graph.n == n and len(cands) == rotations
@@ -186,9 +208,9 @@ def main() -> None:
         # best-of-N with early stop: a single descheduled window must
         # not fail the floor, so keep sampling until the ISSUE-2 claim
         # (or a higher configured floor) holds or the budget runs out
-        target = max(floor, 5.0)
+        target = max(floor or 0.0, 5.0)
         t_bat, res_bat = sweep("batched")
-        for _ in range(5):
+        for _ in range(0 if floor is None else 5):
             if t_loop / t_bat >= target:
                 break
             t2, r2 = sweep("batched")
@@ -206,9 +228,29 @@ def main() -> None:
         print(f"candidates,{t_bat*1e6:.0f},n={n};rotations={rotations};"
               f"loop_us={t_loop*1e6:.0f};speedup={speed:.1f}x;"
               f"winner=rot{i_b};winner_identical=1")
-        assert speed >= floor, (
+        assert floor is None or speed >= floor, (
             f"batched candidate sweep speedup {speed:.1f}x below the "
             f"{floor:.0f}x smoke floor")
+
+    def hier_bench():
+        """Flat vs hierarchical (coarsen -> map -> refine) engine.
+
+        Runs both sparse-XK7 scenarios of benchmarks/hier.py; every
+        pass asserts the quality (within 5% of flat), monotone
+        refinement and ~cores_per_node x engine-pass point reduction
+        oracles.  The >=4x end-to-end speedup floor (ISSUE 3) is
+        enforced at 2^18+ tasks — ``--smoke`` runs 2^14 tasks where
+        constant overheads dominate, so only the oracles run there.
+        The ``flat_vs_hier`` derived field lands in the JSON records
+        so the bench trajectory tracks mapping-engine scaling.
+        """
+        if args.full:
+            hier.main()  # 2^20 tasks / 64K+ allocated nodes
+            return
+        n = (1 << 14) if args.smoke else (1 << 18)
+        results = hier.run(n=n, quiet=True, check_speed=not args.smoke)
+        t = results["scenarios"][hier.SCENARIOS[0][0]]["t_node_s"]
+        print(f"hier,{t*1e6:.0f},{hier.headline(results)}")
 
     def table1():
         if args.full:
@@ -264,6 +306,7 @@ def main() -> None:
     benches = {
         "partition": partition_bench,
         "candidates": candidates_bench,
+        "hier": hier_bench,
         "table1_orderings": table1,
         "minighost": mini,
         "homme_bgq": bgq,
@@ -274,7 +317,7 @@ def main() -> None:
     ok = True
     records = []
     for name, fn in benches.items():
-        if args.only and name != args.only:
+        if only is not None and name not in only:
             continue
         ok = _run(name, fn, records) and ok
     if args.json:

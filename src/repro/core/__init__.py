@@ -15,8 +15,9 @@ from .metrics import (Traffic, average_hops, data_metric,
                       pairwise_hops, per_dim_stats, route_traffic,
                       total_hops, weighted_hops)
 from .orderings import (BACKENDS, SFC_KINDS, gray_decode, gray_encode,
-                        grid_order, hilbert_index, order_points,
-                        order_points_batched, order_points_recursive)
+                        grid_order, hilbert_index, hilbert_key,
+                        order_points, order_points_batched,
+                        order_points_recursive)
 from .taskgraph import (TaskGraph, cube_coords, cube_sphere_graph,
                         face2d_coords, logical_mesh_graph, stencil_graph)
 from .transforms import (apply_permutation, box_lift, drop_dims,
@@ -31,7 +32,8 @@ __all__ = [
     "data_metric", "drop_dims", "evaluate", "evaluate_candidates",
     "evaluate_mapping", "face2d_coords", "gemini_xk7", "geometric_map",
     "gray_decode", "gray_encode", "grid_order", "hilbert_index",
-    "identity_mapping", "latency_metric", "logical_mesh_graph",
+    "hilbert_key", "identity_mapping", "latency_metric",
+    "logical_mesh_graph",
     "make_machine", "normalize_extents", "order_points",
     "order_points_batched", "order_points_recursive",
     "pairwise_hops", "per_dim_stats",

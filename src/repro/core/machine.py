@@ -192,6 +192,23 @@ def block_allocation(machine: Machine, block_dims=None) -> Allocation:
     return Allocation(machine, coords)
 
 
+def _first_free_window(occupied: np.ndarray, sz: int) -> int:
+    """Start of the first run of >= ``sz`` consecutive free slots, or -1."""
+    free = ~occupied
+    if sz <= 0 or not free.any():
+        return -1
+    # run-length encode the free mask: starts/ends of maximal free runs
+    edges = np.diff(free.astype(np.int8))
+    starts = np.flatnonzero(edges == 1) + 1
+    ends = np.flatnonzero(edges == -1) + 1
+    if free[0]:
+        starts = np.concatenate([[0], starts])
+    if free[-1]:
+        ends = np.concatenate([ends, [len(free)]])
+    fits = np.flatnonzero(ends - starts >= sz)
+    return int(starts[fits[0]]) if len(fits) else -1
+
+
 def sfc_allocation(machine: Machine, nnodes: int, *, start: int | None = None,
                    nfragments: int = 1, seed: int = 0) -> Allocation:
     """ALPS-like sparse allocation: nodes ordered by a Hilbert SFC over the
@@ -224,6 +241,8 @@ def sfc_allocation(machine: Machine, nnodes: int, *, start: int | None = None,
         segs = []
         occupied = np.zeros(total, dtype=bool)
         for sz in sizes:
+            if sz == 0:
+                continue
             for _ in range(64):
                 s = int(rng.integers(0, total - sz + 1))
                 if not occupied[s: s + sz].any():
@@ -231,12 +250,19 @@ def sfc_allocation(machine: Machine, nnodes: int, *, start: int | None = None,
                     segs.append(order[s: s + sz])
                     break
             else:
-                # fallback: first free window
-                free = np.flatnonzero(~occupied)
-                s = free[0]
+                # fallback: first window of >= sz genuinely free slots
+                # (blindly taking free[0] could overlap earlier fragments
+                # and duplicate coordinates in the allocation)
+                s = _first_free_window(occupied, sz)
+                if s < 0:
+                    raise ValueError(
+                        f"no free window of {sz} contiguous SFC slots for "
+                        f"a fragment ({int(occupied.sum())}/{total} "
+                        f"occupied); lower nfragments or nnodes")
                 occupied[s: s + sz] = True
                 segs.append(order[s: s + sz])
-        chosen = np.concatenate(segs)[:nrouters]
+        chosen = (np.concatenate(segs)[:nrouters] if segs
+                  else np.zeros(0, dtype=np.int64))
     router_coords = pts[chosen]
     if machine.core_dims:
         cdims = machine.dims[machine.ndim - machine.core_dims:]
@@ -244,7 +270,9 @@ def sfc_allocation(machine: Machine, nnodes: int, *, start: int | None = None,
         coords = np.concatenate(
             [np.repeat(router_coords, len(cores), axis=0),
              np.tile(cores, (len(router_coords), 1))], axis=1)
-        coords = coords[:nnodes] if nnodes else coords
+        # trim the core expansion of the last router to the exact request
+        # (nnodes == 0 must give an EMPTY allocation, not the full grid)
+        coords = coords[:nnodes]
     else:
         coords = router_coords
     return Allocation(machine, coords)

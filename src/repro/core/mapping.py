@@ -32,12 +32,16 @@ class MappingResult:
     For tnum > pnum several tasks share a processor.  ``proc_to_tasks`` is
     a list of task-index arrays per processor.  ``rotation`` records the
     winning (task_perm, proc_perm) of the rotation search; ``score`` its
-    objective value (WeightedHops for the classic search).
+    objective value (WeightedHops for the classic search).  ``stats``
+    carries pipeline-reported accounting (engine-pass point counts, the
+    hierarchical coarsening/refinement summary, ...) for benchmarks and
+    tests; it never affects the mapping itself.
     """
 
     task_to_proc: np.ndarray
     rotation: tuple = ((), ())
     score: float = float("nan")
+    stats: dict = dataclasses.field(default_factory=dict)
 
     def proc_to_tasks(self, pnum: int) -> list:
         out = [[] for _ in range(pnum)]
@@ -113,6 +117,11 @@ class MapperConfig:
     sweep          : rotation-sweep mode ("batched" = ~2 engine passes
                      for the whole sweep; "loop" = per-candidate oracle).
     score_backend  : candidate scoring engine ("numpy" or "jax").
+    hierarchy      : "flat" (one point per core, classic) or "node"
+                     (coarsen -> map at router granularity -> refine;
+                     :mod:`repro.hier`).
+    refine_rounds / refine_top / refine_degree : bounds of the node-
+                     level swap refinement (hierarchy="node" only).
     """
 
     sfc: str = "FZ"
@@ -128,6 +137,10 @@ class MapperConfig:
     backend: str = "vectorized"
     sweep: str = "batched"
     score_backend: str = "numpy"
+    hierarchy: str = "flat"
+    refine_rounds: int = 2
+    refine_top: int = 64
+    refine_degree: int = 4
 
 
 class Mapper:

@@ -440,20 +440,34 @@ def _hilbert_grid(shape: tuple[int, ...], bits: int) -> np.ndarray:
     return h.reshape(shape)
 
 
+def hilbert_key(coords: np.ndarray, bits: int | None = None) -> np.ndarray:
+    """Hilbert index of arbitrary float points (quantised to a grid).
+
+    Default resolution: enough bits to separate ~n points per
+    dimension, capped so the interleaved index fits int64.  Shared by
+    the generic Hilbert part numbering below and the hierarchical
+    subsystem's intra-node task ordering (:mod:`repro.hier.refine`).
+    """
+    coords = np.asarray(coords, dtype=np.float64)
+    n, d = coords.shape
+    if bits is None:
+        bits = max(1, min(62 // max(d, 1),
+                          int(np.ceil(np.log2(max(n, 2)) / max(d, 1))) + 2))
+    side = 1 << bits
+    lo = coords.min(axis=0)
+    span = coords.max(axis=0) - lo
+    span = np.where(span > 0, span, 1.0)
+    q = np.clip(((coords - lo) / span * (side - 1)).round().astype(np.int64),
+                0, side - 1)
+    return hilbert_index(q, bits)
+
+
 def _hilbert_order_points(coords: np.ndarray, nparts: int,
                           weights: np.ndarray | None) -> np.ndarray:
     """Hilbert ordering for arbitrary point sets: quantise to a grid,
     order by Hilbert index, split into equal-count parts."""
-    n, d = coords.shape
-    bits = max(1, min(62 // max(d, 1),
-                      int(np.ceil(np.log2(max(n, 2)) / max(d, 1))) + 2))
-    side = 1 << bits
-    lo = coords.min(axis=0)
-    hi = coords.max(axis=0)
-    span = np.where(hi - lo > 0, hi - lo, 1.0)
-    q = np.clip(((coords - lo) / span * (side - 1)).round().astype(np.int64),
-                0, side - 1)
-    h = hilbert_index(q, bits)
+    n = len(coords)
+    h = hilbert_key(coords)
     order = np.argsort(h, kind="stable")
     mu = np.zeros(n, dtype=np.int64)
     if weights is None:
@@ -461,8 +475,14 @@ def _hilbert_order_points(coords: np.ndarray, nparts: int,
         bounds = (np.arange(1, nparts) * n) // nparts
         mu[order] = np.searchsorted(bounds, np.arange(n), side="right")
     else:
+        # weight-proportional split on the EXCLUSIVE prefix (the weight
+        # strictly before each point): part = floor(prefix/total *
+        # nparts).  The old inclusive cumsum shifted every boundary by
+        # one point — part 0 was always empty and the last part doubled
+        # (equal weights with n == nparts were not even a permutation).
         w = np.asarray(weights, dtype=np.float64)[order]
-        cw = np.cumsum(w)
-        cw /= cw[-1]
-        mu[order] = np.minimum((cw * nparts).astype(np.int64), nparts - 1)
+        cw = np.cumsum(w) - w
+        total = cw[-1] + w[-1]
+        mu[order] = np.minimum((cw / total * nparts).astype(np.int64),
+                               nparts - 1)
     return mu

@@ -1,0 +1,32 @@
+"""repro.hier — hierarchical (node-level) mapping subsystem.
+
+The paper maps multicore machines at *node* granularity: intra-node
+communication is free (§2), so partitioning one point per core only
+multiplies the partitioner's work by cores_per_node without improving
+the mapping.  This package reproduces that optimisation as a
+coarsen -> map -> refine stack over the unified mapping pipeline:
+
+1. :mod:`repro.hier.aggregate` — contract the task graph into
+   node-sized geometric clusters (weighted centroids + summed message
+   volumes), with the same vectorised segment idioms as the
+   partitioning engine;
+2. :mod:`repro.hier.levels` — run the existing batched rotation-sweep
+   pipeline at router granularity (one point per allocated node);
+3. :mod:`repro.hier.refine` — expand clusters onto cores in intra-node
+   SFC order and improve the node assignment with a bounded, monotone
+   greedy swap pass scored through batched ``evaluate_candidates``.
+
+Select it with ``PipelineConfig(hierarchy="node")`` (or
+``MapperConfig(hierarchy="node")`` / ``select_mapping(...,
+hierarchy="node")``); ``hierarchy="flat"`` keeps the classic one-point-
+per-core path.  The ``hier`` benchmark entry compares the two.
+"""
+
+from .aggregate import Aggregation, aggregate_tasks
+from .levels import map_hierarchical, router_view
+from .refine import assign_cores, hilbert_key, refine_swaps
+
+__all__ = [
+    "Aggregation", "aggregate_tasks", "assign_cores", "hilbert_key",
+    "map_hierarchical", "refine_swaps", "router_view",
+]

@@ -1,0 +1,143 @@
+"""Two-level (coarsen -> map -> refine) driver (hierarchical stage 2).
+
+``map_hierarchical`` runs the existing batched rotation-sweep pipeline
+at *router* granularity: one point per allocated node instead of one
+per core.  On a 16-core-per-node machine every engine pass therefore
+partitions ~16x fewer points than the flat pipeline, while the mapping
+quality is preserved — the paper's own machine transforms already give
+all cores of a node identical (router) coordinates, so the flat
+partitioner was spending its effort keeping points together that a
+node-level map gets for free.
+
+The flow (paper §2 node-granularity argument + the multilevel structure
+of Schulz & Woydt's hierarchical process mapping):
+
+1. :func:`repro.hier.aggregate.aggregate_tasks` contracts the task
+   graph into one geometric cluster per allocated node;
+2. the coarse problem runs through the UNCHANGED pipeline machinery —
+   ``MappingPipeline.map_candidates`` batched rotation sweep over the
+   cluster centroids and router coordinates, scored by the same
+   :class:`repro.mapping.CandidateSearch`;
+3. :func:`repro.hier.refine.refine_swaps` improves the winner with
+   bounded greedy inter-node swaps (monotone), and
+   :func:`repro.hier.refine.assign_cores` expands the node-level
+   assignment to cores in intra-node SFC order.
+
+Because every task inherits its node's router coordinates, the coarse
+graph's volume-weighted metrics equal the fine mapping's exactly
+(``weighted_hops``, ``latency_max``, ``data_max``); see
+tests/test_hier.py for the asserted identity.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.machine import Allocation
+from repro.core.mapping import MappingResult
+
+from .aggregate import aggregate_tasks
+from .refine import assign_cores, refine_swaps
+
+
+def router_view(alloc: Allocation):
+    """Collapse a core-granularity allocation to its routers.
+
+    Returns ``(router_coords, core_router, router_alloc)``:
+
+    router_coords : (r, nd_net) int coordinates of the distinct routers.
+    core_router   : (ncores,) router id of every allocation core row.
+    router_alloc  : an :class:`Allocation` with ONE row per router
+                    (core dims zero-padded) — a drop-in for the machine
+                    transforms and the candidate scorer.
+    """
+    machine = alloc.machine
+    nd = machine.ndim - machine.core_dims
+    rows = np.asarray(alloc.coords[:, :nd], dtype=np.int64)
+    # flat router keys instead of np.unique(axis=0): one 1D unique pass
+    # (the structured-dtype row compare is ~10x slower at 2^18 cores)
+    rdims = machine.dims[:nd]
+    keys = np.ravel_multi_index(tuple(rows.T), rdims)
+    ukeys, core_router = np.unique(keys, return_inverse=True)
+    router_coords = np.stack(np.unravel_index(ukeys, rdims), axis=1)
+    core_router = core_router.reshape(-1)
+    pad = np.zeros((len(router_coords), machine.core_dims), dtype=np.int64)
+    router_alloc = Allocation(
+        machine, np.concatenate([router_coords, pad], axis=1))
+    return router_coords, core_router, router_alloc
+
+
+def map_hierarchical(
+    pipe,
+    graph,
+    alloc: Allocation,
+    task_coords: np.ndarray | None = None,
+    task_weights: np.ndarray | None = None,
+) -> MappingResult:
+    """Hierarchical coarsen -> map -> refine for ``pipe``'s config.
+
+    ``pipe`` is the owning :class:`repro.mapping.MappingPipeline`; its
+    config controls the partitioner/sweep/scoring stages exactly as in
+    the flat path, plus the ``refine_*`` knobs.  Returns a core-level
+    :class:`MappingResult` whose ``stats`` record the engine-pass point
+    counts (the ~cores_per_node x reduction the ``hier`` benchmark
+    asserts) and the refinement trajectory.
+    """
+    from repro.mapping.candidates import rotation_candidates
+
+    cfg = pipe.config
+    machine = alloc.machine
+    tc = np.asarray(task_coords if task_coords is not None
+                    else graph.coords, dtype=np.float64)
+    tnum = len(tc)
+
+    router_coords, core_router, router_alloc = router_view(alloc)
+    nrouters = len(router_coords)
+    cores_per_node = max(1, -(-alloc.n // nrouters))  # ceil: max cores/router
+
+    # one geometric cluster per allocated node (fewer when the job has
+    # fewer tasks than nodes; the coarse map then picks the closest
+    # router subset exactly like the flat tnum < pnum case)
+    nclusters = min(nrouters, max(1, -(-tnum // cores_per_node)))
+    agg = aggregate_tasks(
+        graph, nclusters, task_coords=tc, task_weights=task_weights,
+        sfc=cfg.sfc, longest_dim=cfg.longest_dim,
+        uneven_prime=cfg.uneven_prime, backend=cfg.backend)
+
+    # stage 2: the UNCHANGED batched rotation sweep, at router granularity
+    pc = pipe.machine_coords(router_alloc)
+    cands = rotation_candidates(agg.coarse.coords.shape[1], pc.shape[1],
+                                cfg.rotations)
+    results = pipe.map_candidates(agg.coarse.coords, pc, cands,
+                                  task_weights=agg.weights)
+    if len(results) == 1:
+        coarse_best = results[0]
+    else:
+        coarse_best, best_i, scores = pipe.search.best(
+            agg.coarse, router_alloc, results)
+        coarse_best.score = float(scores[best_i][0])
+
+    # stage 3: bounded greedy inter-node swaps (monotone), then expand
+    c2r, rstats = refine_swaps(
+        machine, agg.coarse, router_coords,
+        coarse_best.task_to_proc,
+        objective=pipe.search.objective,
+        rounds=cfg.refine_rounds, top=cfg.refine_top,
+        degree=cfg.refine_degree, score_backend=cfg.score_backend)
+    t2p = assign_cores(agg.labels, c2r, core_router, tc, nrouters)
+
+    stats = {
+        "hierarchy": "node",
+        "nclusters": int(nclusters),
+        "nrouters": int(nrouters),
+        "cores_per_node": int(cores_per_node),
+        "intra_volume": agg.intra_volume,
+        # points partitioned by ONE engine pass of the rotation sweep
+        # (flat partitions tnum tasks + alloc.n cores instead)
+        "sweep_points": int(nclusters + nrouters),
+        "flat_sweep_points": int(tnum + alloc.n),
+        "coarsen_points": int(tnum),
+    }
+    stats.update(rstats)
+    return MappingResult(t2p, rotation=coarse_best.rotation,
+                         score=float(rstats["refine_final"]), stats=stats)

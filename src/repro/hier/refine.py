@@ -1,0 +1,325 @@
+"""Intra-node core assignment + inter-node swap refinement (stage 3).
+
+After the coarse map places one task cluster per allocated node, two
+things remain:
+
+- :func:`assign_cores` expands the node-level assignment to core
+  granularity: each cluster's tasks are laid onto its node's cores in
+  intra-node SFC (Hilbert) order.  Cores of a node sit at hop distance
+  zero, so this choice never changes a metric — it only keeps the
+  within-node rank order deterministic and geometrically contiguous
+  (neighbouring tasks get neighbouring ranks, which real applications
+  exploit for shared-memory optimisations).
+
+- :func:`refine_swaps` is a bounded greedy local search in the spirit of
+  Schulz & Träff's process-mapping refinement: swap the clusters of two
+  network-adjacent nodes when it lowers the objective.  Because every
+  fine task carries its node's router coordinates, the coarse graph's
+  volume-weighted metrics (``weighted_hops``, ``latency_max``,
+  ``data_max``) are EXACTLY the fine mapping's — scoring swaps on the
+  contracted graph loses nothing.  Candidate swaps of a round are scored
+  in batched :func:`repro.core.metrics.evaluate_candidates` passes (one
+  coordinate stack per chunk), and a whole accepted set is re-verified
+  against the base score so the pass is monotone by construction.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import evaluate_candidates, pairwise_hops
+from repro.core.orderings import hilbert_key
+
+
+def assign_cores(
+    labels: np.ndarray,
+    cluster_to_router: np.ndarray,
+    core_router: np.ndarray,
+    task_coords: np.ndarray,
+    nrouters: int,
+) -> np.ndarray:
+    """Expand cluster -> node into task -> core (intra-node SFC order).
+
+    labels            : (n,) cluster id per task.
+    cluster_to_router : (nclusters,) router id per cluster.
+    core_router       : (ncores,) router id of every allocation core row.
+    task_coords       : (n, d) task coordinates (for the Hilbert order).
+    nrouters          : number of distinct routers in the allocation.
+
+    Returns ``task_to_proc``: (n,) index into the allocation's core rows.
+    Tasks of a cluster are sorted by their Hilbert index and dealt onto
+    the node's cores in allocation order.  No core ever receives more
+    than ``ceil(n / ncores)`` tasks: a node holds at most that many
+    tasks per core (round-robin, like the flat mapper's tnum > pnum
+    case), and tasks beyond a node's capacity — possible when router
+    core counts are uneven (a trimmed allocation) or task clusters are
+    weight-balanced — spill onto the remaining free core slots in
+    allocation (SFC) order.  In particular ``n == ncores`` is always a
+    BIJECTION, matching the flat pipeline's tnum == pnum contract.
+    """
+    labels = np.asarray(labels)
+    n = len(labels)
+    ncores = len(core_router)
+    # tasks grouped by ROUTER (then cluster, then Hilbert index): the
+    # rank is taken within the router group, so even a non-injective
+    # cluster -> router map (possible when skewed task weights starve a
+    # coarse part) packs co-located clusters without collisions
+    r_task = np.asarray(cluster_to_router)[labels]
+    order = np.lexsort((hilbert_key(task_coords), labels, r_task))
+    rsz_t = np.bincount(r_task, minlength=nrouters)  # tasks per router
+    rstarts_t = np.cumsum(rsz_t) - rsz_t
+    r = r_task[order]
+    rank = np.arange(n) - rstarts_t[r]
+
+    # allocation core rows grouped by router (allocation order within)
+    core_order = np.argsort(core_router, kind="stable").astype(np.int64)
+    rsizes = np.bincount(core_router, minlength=nrouters)
+    rstarts = np.cumsum(rsizes) - rsizes
+
+    q = -(-n // ncores)  # global per-core task budget (>= 1)
+    fits = rank < rsizes[r] * q
+    t2p = np.empty(n, dtype=np.int64)
+    t2p[order[fits]] = core_order[rstarts[r[fits]]
+                                  + rank[fits] % rsizes[r[fits]]]
+    if not fits.all():
+        # spill: fill the remaining per-core budget in allocation order
+        counts = np.bincount(t2p[order[fits]], minlength=ncores)
+        free = np.repeat(core_order, q - counts[core_order])
+        t2p[order[~fits]] = free[: int((~fits).sum())]
+    return t2p
+
+
+def _pad_stack(stack: np.ndarray, ndim: int) -> np.ndarray:
+    """Zero-pad network-dim coordinate stacks to the machine's full ndim
+    (the batched router indexes every machine dimension)."""
+    pad = ndim - stack.shape[-1]
+    if pad <= 0:
+        return stack
+    z = np.zeros(stack.shape[:-1] + (pad,), dtype=stack.dtype)
+    return np.concatenate([stack, z], axis=-1)
+
+
+def _scores(machine, edges, weights, stack, objective, backend):
+    """(B, len(objective)) score matrix for a coordinate stack.
+
+    Hops-only objectives read just the network columns, so the stack is
+    zero-padded to the machine's full ndim only when the batched router
+    runs (traffic objectives index every machine dimension)."""
+    traffic = any(k in ("latency_max", "data_max") for k in objective)
+    if traffic:
+        stack = _pad_stack(stack, machine.ndim)
+    ev = evaluate_candidates(machine, edges, weights, stack,
+                             traffic=traffic, backend=backend)
+    return np.stack([np.asarray(ev[k], dtype=np.float64)
+                     for k in objective], axis=1)
+
+
+def _lex_less(a: np.ndarray, b: np.ndarray, tol: float = 1e-12) -> bool:
+    """Strict lexicographic a < b with a tolerance per component."""
+    for x, y in zip(a, b):
+        if x < y - tol:
+            return True
+        if x > y + tol:
+            return False
+    return False
+
+
+def refine_swaps(
+    machine,
+    coarse,
+    router_coords: np.ndarray,
+    cluster_to_router: np.ndarray,
+    *,
+    objective: tuple = ("weighted_hops",),
+    rounds: int = 2,
+    top: int = 64,
+    degree: int = 4,
+    chunk: int = 64,
+    score_backend: str = "numpy",
+) -> tuple[np.ndarray, dict]:
+    """Bounded greedy swap refinement of a cluster -> router assignment.
+
+    Each round: rank clusters by their contribution to the weighted-hops
+    objective, take the ``top`` hottest, and propose exchanging each with
+    the occupants of its ``degree`` network-nearest allocated routers
+    (a move when the target router is empty).  All proposals of a round
+    are scored in batched ``evaluate_candidates`` passes (chunked to
+    bound memory).  For sum-separable objectives (``weighted_hops``,
+    ``total_hops``) the pass restricts the edge list to edges incident
+    to a touched cluster — a proposal only moves two clusters, so
+    ``score = base_full - base_union + union(proposal)`` is EXACT while
+    costing |union edges| instead of |all edges| per proposal (the
+    bound that keeps refinement out of the hier benchmark's critical
+    path).  Max-based objectives (``latency_max``/``data_max``) score
+    full stacks.  A greedy disjoint set of strictly-improving proposals
+    is applied, then the combined assignment is re-scored on the FULL
+    graph — if the interactions between accepted swaps ever made it
+    worse, the round falls back to the single best proposal, whose
+    exact score is known to improve.  The returned assignment therefore
+    NEVER scores worse than the input (monotone; asserted in
+    tests/test_hier.py).
+
+    Returns ``(refined cluster_to_router, stats)`` where stats carries
+    the per-round objective history and acceptance counts.
+    """
+    router_coords = np.asarray(router_coords, dtype=np.int64)
+    c2r = np.asarray(cluster_to_router, dtype=np.int64).copy()
+    nclusters = len(c2r)
+    nrouters = len(router_coords)
+    # occupant table (last writer wins if c2r is ever non-injective —
+    # proposal bookkeeping only; scores always come from the true c2r)
+    r2c = np.full(nrouters, -1, dtype=np.int64)
+    r2c[c2r] = np.arange(nclusters)
+
+    edges = coarse.edges
+    w = np.asarray(coarse.weights, dtype=np.float64)
+    separable = all(k in ("weighted_hops", "total_hops") for k in objective)
+
+    base = _scores(machine, edges, w, router_coords[c2r][None],
+                   objective, score_backend)[0]
+    history = [base.copy()]
+    accepted_total = 0
+    evaluated_total = 0
+
+    for _ in range(max(rounds, 0)):
+        cc = router_coords[c2r]
+        if len(edges) == 0:
+            break
+        # per-cluster objective contribution (weighted hops both ways)
+        h = pairwise_hops(machine, cc[edges[:, 0]], cc[edges[:, 1]]) * w
+        contrib = (np.bincount(edges[:, 0], weights=h, minlength=nclusters)
+                   + np.bincount(edges[:, 1], weights=h,
+                                 minlength=nclusters))
+        hot = np.argsort(-contrib, kind="stable")[:top]
+        hot = hot[contrib[hot] > 0]
+        if len(hot) == 0:
+            break
+
+        # network-nearest allocated routers per hot cluster
+        shape = (len(hot), nrouters, cc.shape[1])
+        d = pairwise_hops(machine,
+                          np.broadcast_to(cc[hot][:, None, :], shape),
+                          np.broadcast_to(router_coords[None, :, :], shape)
+                          ).astype(np.float64)
+        d[np.arange(len(hot)), c2r[hot]] = np.inf  # not itself
+        k = min(degree, nrouters - 1)
+        if k <= 0:
+            break
+        # argpartition + a small per-row sort: a full argsort of the
+        # (top, nrouters) distance matrix showed up in the profile
+        pidx = np.argpartition(d, k - 1, axis=1)[:, :k]
+        sub = np.take_along_axis(d, pidx, axis=1)
+        near = np.take_along_axis(pidx, np.argsort(sub, axis=1,
+                                                   kind="stable"), axis=1)
+
+        # dedup unordered proposals: (cluster a, target router rb)
+        seen = set()
+        proposals = []  # (a, ra, b_or_minus1, rb)
+        for i, a in enumerate(hot):
+            ra = int(c2r[a])
+            for rb in near[i]:
+                rb = int(rb)
+                b = int(r2c[rb])
+                key = (min(ra, rb), max(ra, rb))
+                if key in seen:
+                    continue
+                seen.add(key)
+                proposals.append((int(a), ra, b, rb))
+        if not proposals:
+            break
+        evaluated_total += len(proposals)
+
+        # edge set the proposal scores run on: a proposal only moves two
+        # clusters, so for separable objectives the edges incident to a
+        # touched cluster carry ALL the score difference — score =
+        # base_full - base_union + union(proposal), exact
+        if separable:
+            touched_c = np.zeros(nclusters, dtype=bool)
+            for a, ra, b, rb in proposals:
+                touched_c[a] = True
+                if b >= 0:
+                    touched_c[b] = True
+            em = touched_c[edges[:, 0]] | touched_c[edges[:, 1]]
+            s_edges, s_w = edges[em], w[em]
+            # compact the stacks to the clusters the union edges touch:
+            # an edited row outside the union cannot change the score
+            uc = np.unique(s_edges)
+            remap = np.full(nclusters, -1, dtype=np.int64)
+            remap[uc] = np.arange(len(uc))
+            s_edges = remap[s_edges]
+            s_cc = cc[uc]
+            base_union = _scores(machine, s_edges, s_w, s_cc[None],
+                                 objective, score_backend)[0]
+            offset = base - base_union
+        else:
+            s_edges, s_w = edges, w
+            remap = np.arange(nclusters)
+            s_cc = cc
+            offset = np.zeros_like(base)
+
+        # score every proposal: base stack with the swapped rows edited
+        nb = len(proposals)
+        scores = np.empty((nb, len(base)))
+        for c0 in range(0, nb, chunk):
+            batch = proposals[c0:c0 + chunk]
+            stack = np.repeat(s_cc[None], len(batch), axis=0)
+            for i, (a, ra, b, rb) in enumerate(batch):
+                if remap[a] >= 0:
+                    stack[i, remap[a]] = router_coords[rb]
+                if b >= 0 and remap[b] >= 0:
+                    stack[i, remap[b]] = router_coords[ra]
+            scores[c0:c0 + chunk] = offset + _scores(
+                machine, s_edges, s_w, stack, objective, score_backend)
+
+        # greedy disjoint accept, best improvement first
+        order = np.lexsort(tuple(scores[:, j]
+                                 for j in reversed(range(scores.shape[1]))))
+        touched = set()
+        chosen = []
+        for i in order:
+            if not _lex_less(scores[i], base):
+                break  # sorted: nothing further improves
+            a, ra, b, rb = proposals[i]
+            if {ra, rb} & touched:
+                continue
+            touched |= {ra, rb}
+            chosen.append(i)
+        if not chosen:
+            break
+
+        def _apply(sel, c2r=c2r, r2c=r2c):
+            nc, nr = c2r.copy(), r2c.copy()
+            for i in sel:
+                a, ra, b, rb = proposals[i]
+                nc[a] = rb
+                nr[rb] = a
+                nr[ra] = b
+                if b >= 0:
+                    nc[b] = ra
+            return nc, nr
+
+        new_c2r, new_r2c = _apply(chosen)
+        combined = _scores(machine, edges, w, router_coords[new_c2r][None],
+                           objective, score_backend)[0]
+        if len(chosen) > 1 and not _lex_less(combined, base):
+            # accepted swaps interacted badly: keep only the best one,
+            # whose exact score is already known to beat the base
+            chosen = [int(order[0])]
+            new_c2r, new_r2c = _apply(chosen)
+            combined = scores[chosen[0]]
+        if not _lex_less(combined, base):
+            break  # cannot happen for a single exact swap; safety net
+        c2r, r2c = new_c2r, new_r2c
+        base = np.asarray(combined, dtype=np.float64)
+        history.append(base.copy())
+        accepted_total += len(chosen)
+
+    stats = {
+        "refine_rounds_run": len(history) - 1,
+        "refine_accepted": accepted_total,
+        "refine_evaluated": evaluated_total,
+        "refine_history": [tuple(float(x) for x in h) for h in history],
+        "refine_initial": float(history[0][0]),
+        "refine_final": float(history[-1][0]),
+    }
+    return c2r, stats

@@ -72,6 +72,16 @@ class PipelineConfig:
       score_backend : candidate scoring engine, "numpy" (default) or
                   "jax" (jit-compiled; silent numpy fallback when jax
                   is unavailable).
+
+    Hierarchy stage (:mod:`repro.hier`):
+      hierarchy : "flat" partitions one point per core (classic);
+                  "node" coarsens tasks into node-sized clusters and
+                  runs the rotation sweep at router granularity
+                  (~cores_per_node x fewer points per engine pass),
+                  then refines with bounded greedy inter-node swaps.
+      refine_rounds / refine_top / refine_degree : bounds of the swap
+                  refinement (rounds, hottest clusters considered per
+                  round, nearest routers proposed per cluster).
     """
 
     sfc: str = "FZ"
@@ -88,6 +98,10 @@ class PipelineConfig:
     objective: str | tuple = "weighted_hops"
     sweep: str = "batched"
     score_backend: str = "numpy"
+    hierarchy: str = "flat"
+    refine_rounds: int = 2
+    refine_top: int = 64
+    refine_degree: int = 4
 
 
 class MappingPipeline:
@@ -272,8 +286,21 @@ class MappingPipeline:
             task_weights: np.ndarray | None = None) -> MappingResult:
         """Full pipeline: transforms, one batched rotation sweep through
         the partitioner, batched scoring; returns the best MappingResult
-        (score = objective)."""
+        (score = objective).
+
+        ``hierarchy="node"`` routes through :mod:`repro.hier` instead:
+        coarsen tasks to node-sized clusters, run the SAME rotation
+        sweep at router granularity, refine with bounded greedy
+        inter-node swaps, expand to cores in intra-node SFC order.
+        """
         cfg = self.config
+        if cfg.hierarchy not in ("flat", "node"):
+            raise ValueError(f"unknown hierarchy {cfg.hierarchy!r}")
+        if cfg.hierarchy == "node":
+            from repro.hier.levels import map_hierarchical
+            return map_hierarchical(self, graph, alloc,
+                                    task_coords=task_coords,
+                                    task_weights=task_weights)
         pc = self.machine_coords(alloc)
         tc = np.asarray(task_coords if task_coords is not None
                         else graph.coords, dtype=np.float64)
@@ -281,7 +308,10 @@ class MappingPipeline:
         results = self.map_candidates(tc, pc, cands,
                                       task_weights=task_weights)
         if len(results) == 1:
-            return results[0]
-        best, best_i, scores = self.search.best(graph, alloc, results)
-        best.score = float(scores[best_i][0])
+            best = results[0]
+        else:
+            best, best_i, scores = self.search.best(graph, alloc, results)
+            best.score = float(scores[best_i][0])
+        best.stats.update(hierarchy="flat",
+                          sweep_points=int(len(tc) + alloc.n))
         return best

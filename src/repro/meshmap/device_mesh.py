@@ -58,7 +58,7 @@ def device_coords(devices, machine) -> np.ndarray:
 def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
                   *, devices=None, machine=None, axis_bytes=None,
                   rotations: int = 16, return_report: bool = False,
-                  score_backend: str = "numpy"):
+                  score_backend: str = "numpy", hierarchy: str = "flat"):
     """Build a Mesh whose device order minimises modeled link traffic.
 
     Candidate-selection (the paper's §4.3 rotation search, generalised):
@@ -88,7 +88,8 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
     graph = logical_mesh_graph(axis_sizes, tuple(ab), tuple(axis_names))
     alloc = Allocation(machine, device_coords(devices, machine).astype(int))
     best, best_metrics, base_metrics = select_mapping(
-        graph, alloc, ab, rotations=rotations, score_backend=score_backend)
+        graph, alloc, ab, rotations=rotations, score_backend=score_backend,
+        hierarchy=hierarchy)
     order = best.task_to_proc  # logical flat index -> device index
     dev_array = np.array(devices, dtype=object)[order].reshape(axis_sizes)
     mesh = Mesh(dev_array, tuple(axis_names))
@@ -98,7 +99,7 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
 
 
 def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
-                   score_backend: str = "numpy"):
+                   score_backend: str = "numpy", hierarchy: str = "flat"):
     """Candidate search: default order + FZ mappings under raw and
     traffic-scaled task coordinates x rotations; returns
     (best MappingResult, best metrics, default metrics).
@@ -112,6 +113,12 @@ def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
     (``score_backend="jax"`` routes it through the jit-compiled
     scorer).  The identity/default mapping is listed first, so on ties
     the search is never worse than jax's enumeration order.
+
+    ``hierarchy="node"`` routes each pipeline call through the
+    hierarchical coarsen -> map -> refine subsystem (:mod:`repro.hier`)
+    — worthwhile on machines with core dims or very large logical
+    meshes; on a machine without core dims it degenerates to the
+    router-granularity map plus the monotone swap refinement.
     """
     candidates = [identity_mapping(graph, alloc)]
     for scaled in (False, True):
@@ -121,7 +128,7 @@ def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
         for rot in (0, rotations):
             pipe = MappingPipeline(PipelineConfig(
                 sfc="FZ", shift=True, bandwidth_scale=True, rotations=rot,
-                score_backend=score_backend))
+                score_backend=score_backend, hierarchy=hierarchy))
             candidates.append(pipe.map(graph, alloc, task_coords=tc))
     search = CandidateSearch(objective=("latency_max", "weighted_hops"),
                              backend=score_backend)

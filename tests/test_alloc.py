@@ -1,0 +1,153 @@
+"""Allocation-helper tests: sfc_allocation fragment disjointness, exact
+row counts (with and without core dims), the nnodes=0 edge case,
+random_allocation uniqueness, the free-window fallback, and a
+hypothesis in-bounds property (skipped when hypothesis is absent)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (bgq, gemini_xk7, make_machine, random_allocation,
+                        sfc_allocation)
+from repro.core.machine import _first_free_window
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev-only dependency
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# fragment disjointness (the silent-overlap bug of the fallback path)
+# ---------------------------------------------------------------------------
+
+def test_fragments_disjoint_under_pressure():
+    """Heavy fragmentation of a small machine forces the random
+    placement to collide, exercising the free-window fallback: every
+    successful allocation must have DISJOINT fragments (no duplicated
+    coordinates — the old fallback silently overlapped), and requests
+    whose free space genuinely fragments must raise, not overlap.
+    Both paths must occur across the seed sweep."""
+    m = make_machine((8, 8), wrap=True)
+    outcomes = {"ok": 0, "raised": 0}
+    for seed in range(16):
+        try:
+            a = sfc_allocation(m, 48, nfragments=12, seed=seed)
+        except ValueError as e:
+            assert "free window" in str(e)
+            outcomes["raised"] += 1
+            continue
+        assert a.n == 48
+        assert len(np.unique(a.coords, axis=0)) == 48
+        outcomes["ok"] += 1
+    assert outcomes["ok"] > 0  # the fallback can succeed
+    assert outcomes["raised"] > 0  # and refuses instead of overlapping
+
+
+@pytest.mark.parametrize("seed", range(24))
+def test_fragments_disjoint_or_explicit_error(seed):
+    """Near-full allocations may leave no contiguous free window for a
+    fragment; the allocator must either produce disjoint fragments or
+    raise — never silently overlap."""
+    m = make_machine((4,), wrap=True)
+    try:
+        a = sfc_allocation(m, 4, nfragments=2, seed=seed)
+    except ValueError as e:
+        assert "free window" in str(e)
+        return
+    assert len(np.unique(a.coords, axis=0)) == a.n == 4
+
+
+def test_first_free_window():
+    occ = np.array([1, 1, 0, 1, 0, 0, 0, 1], dtype=bool)
+    assert _first_free_window(occ, 1) == 2
+    assert _first_free_window(occ, 2) == 4
+    assert _first_free_window(occ, 3) == 4
+    assert _first_free_window(occ, 4) == -1
+    assert _first_free_window(np.ones(4, dtype=bool), 1) == -1
+    assert _first_free_window(np.zeros(4, dtype=bool), 4) == 0
+
+
+# ---------------------------------------------------------------------------
+# exact row counts + the nnodes=0 edge case
+# ---------------------------------------------------------------------------
+
+def test_nnodes_zero_is_empty():
+    # with core dims the old code returned the FULL core expansion
+    m = gemini_xk7(dims=(4, 4, 4), cores_per_node=16)
+    assert sfc_allocation(m, 0, seed=1).n == 0
+    assert sfc_allocation(m, 0, nfragments=3, seed=1).n == 0
+    # and without core dims
+    m2 = make_machine((8, 8), wrap=True)
+    assert sfc_allocation(m2, 0, seed=1).n == 0
+
+
+@pytest.mark.parametrize("nnodes", [1, 15, 16, 40, 64])
+def test_exact_rows_with_core_dims(nnodes):
+    """Requests that are not a multiple of cores-per-node still get
+    exactly nnodes rows (the last router is partially used)."""
+    m = gemini_xk7(dims=(4, 4, 4), cores_per_node=16)
+    a = sfc_allocation(m, nnodes, seed=2)
+    assert a.n == nnodes
+    assert len(np.unique(a.coords, axis=0)) == nnodes
+    b = random_allocation(m, nnodes, seed=2)
+    assert b.n == nnodes
+    assert len(np.unique(b.coords, axis=0)) == nnodes
+
+
+@pytest.mark.parametrize("nnodes", [1, 7, 32])
+def test_exact_rows_without_core_dims(nnodes):
+    m = make_machine((8, 8), wrap=True)
+    for a in (sfc_allocation(m, nnodes, seed=3),
+              random_allocation(m, nnodes, seed=3)):
+        assert a.n == nnodes
+        assert len(np.unique(a.coords, axis=0)) == nnodes
+
+
+def test_allocation_larger_than_machine_raises():
+    m = make_machine((4, 4), wrap=True)
+    with pytest.raises(ValueError):
+        sfc_allocation(m, 17)
+
+
+def test_random_allocation_unique_and_in_bounds():
+    m = bgq(dims=(2, 2, 2, 4, 2), cores_per_node=8)
+    a = random_allocation(m, 100, seed=5)
+    assert a.n == 100
+    assert len(np.unique(a.coords, axis=0)) == 100
+    assert (a.coords >= 0).all()
+    assert (a.coords < np.array(m.dims)).all()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: every coordinate row is in-bounds for its machine
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(2, 6), st.integers(1, 3), st.integers(1, 4),
+           st.integers(0, 31), st.integers(1, 4), st.booleans())
+    @settings(max_examples=40, deadline=None)
+    def test_allocation_coords_in_bounds(side, d, cores, seed, nfrag,
+                                         use_random):
+        machine = make_machine((side,) * d + (cores,), wrap=True,
+                               core_dims=1)
+        total = side ** d * cores
+        nnodes = 1 + seed % total
+        try:
+            if use_random:
+                a = random_allocation(machine, nnodes, seed=seed)
+            else:
+                a = sfc_allocation(machine, nnodes, nfragments=nfrag,
+                                   seed=seed)
+        except ValueError:
+            return  # explicit refusal (no free window) is acceptable
+        assert a.n == nnodes
+        assert (a.coords >= 0).all()
+        assert (a.coords < np.array(machine.dims)).all()
+        assert len(np.unique(a.coords, axis=0)) == nnodes
+else:  # pragma: no cover - hypothesis present in CI
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_allocation_coords_in_bounds():
+        pass

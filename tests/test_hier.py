@@ -1,0 +1,310 @@
+"""Hierarchical mapping subsystem tests (repro.hier).
+
+Covers: geometric aggregation (balance, centroids, volume
+conservation), the router view, the two-level map (bijection, exact
+coarse == fine volume-weighted metrics, the ~cores_per_node x
+engine-pass point reduction, quality vs flat), the monotone swap
+refinement, and the Mapper / meshmap wiring."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Mapper, MapperConfig, TaskGraph, evaluate,
+                        gemini_xk7, identity_mapping, logical_mesh_graph,
+                        make_machine, sfc_allocation, stencil_graph,
+                        tpu_v5e_multipod)
+from repro.core.machine import Allocation
+from repro.core.metrics import evaluate_candidates
+from repro.hier import (aggregate_tasks, assign_cores, refine_swaps,
+                        router_view)
+from repro.mapping import MappingPipeline, PipelineConfig
+
+
+def _grid(n):
+    e = int(np.log2(n))
+    a = e // 3
+    return (1 << (e - 2 * a), 1 << a, 1 << a)
+
+
+def _xk7_case(side=8, cores=16, nfragments=4, seed=1):
+    m = gemini_xk7(dims=(2 * side, side, side), cores_per_node=cores)
+    n = side ** 3 * cores  # half the machine
+    alloc = sfc_allocation(m, n, nfragments=nfragments, seed=seed)
+    g = stencil_graph(_grid(n))
+    assert g.n == n
+    return m, alloc, g
+
+
+# ---------------------------------------------------------------------------
+# aggregation
+# ---------------------------------------------------------------------------
+
+def test_aggregate_balanced_sizes_and_labels():
+    g = stencil_graph((16, 16))
+    agg = aggregate_tasks(g, 16)
+    assert agg.nclusters == 16
+    assert agg.sizes.sum() == g.n
+    assert (agg.sizes == 16).all()  # unit weights: perfectly balanced
+    assert agg.labels.min() == 0 and agg.labels.max() == 15
+    assert np.array_equal(np.bincount(agg.labels), agg.sizes)
+
+
+def test_aggregate_centroids_are_member_means():
+    rng = np.random.default_rng(0)
+    g = stencil_graph((8, 8))
+    agg = aggregate_tasks(g, 4)
+    for c in range(4):
+        members = g.coords[agg.labels == c]
+        assert np.allclose(agg.coarse.coords[c], members.mean(axis=0))
+    # weighted centroids
+    w = rng.uniform(0.5, 2.0, g.n)
+    aggw = aggregate_tasks(g, 4, task_weights=w)
+    for c in range(4):
+        mask = aggw.labels == c
+        expect = np.average(g.coords[mask], axis=0, weights=w[mask])
+        assert np.allclose(aggw.coarse.coords[c], expect)
+        assert np.isclose(aggw.weights[c], w[mask].sum())
+
+
+def test_aggregate_volume_conservation_no_self_edges():
+    g = stencil_graph((8, 8, 8))
+    agg = aggregate_tasks(g, 32)
+    assert (agg.coarse.edges[:, 0] != agg.coarse.edges[:, 1]).all()
+    total = g.weights.sum()
+    assert np.isclose(agg.coarse.weights.sum() + agg.intra_volume, total)
+    # contracted volume between a cluster pair equals the fine volume
+    ce = agg.labels[g.edges]
+    a, b = agg.coarse.edges[0]
+    fine = g.weights[(ce[:, 0] == a) & (ce[:, 1] == b)].sum()
+    assert np.isclose(agg.coarse.weights[0], fine)
+
+
+def test_aggregate_bounds():
+    g = stencil_graph((4, 4))
+    with pytest.raises(ValueError):
+        aggregate_tasks(g, 0)
+    with pytest.raises(ValueError):
+        aggregate_tasks(g, 17)
+    one = aggregate_tasks(g, 1)
+    assert one.nclusters == 1 and len(one.coarse.edges) == 0
+    assert np.isclose(one.intra_volume, g.weights.sum())
+
+
+# ---------------------------------------------------------------------------
+# router view
+# ---------------------------------------------------------------------------
+
+def test_router_view_roundtrip():
+    m = gemini_xk7(dims=(4, 4, 4), cores_per_node=16)
+    alloc = sfc_allocation(m, 8 * 16, seed=0)
+    rc, core_router, ralloc = router_view(alloc)
+    assert len(rc) == 8
+    assert len(core_router) == alloc.n
+    # every core row matches its router's network coords
+    assert np.array_equal(alloc.coords[:, :3], rc[core_router])
+    # the router allocation zero-pads core dims
+    assert ralloc.coords.shape == (8, 4)
+    assert (ralloc.coords[:, 3] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# two-level map
+# ---------------------------------------------------------------------------
+
+def test_hier_bijection_and_quality_vs_flat():
+    m, alloc, g = _xk7_case()
+    flat = Mapper(MapperConfig(sfc="FZ", shift=True, rotations=8))
+    node = Mapper(MapperConfig(sfc="FZ", shift=True, rotations=8,
+                               hierarchy="node"))
+    rf, rn = flat.map(g, alloc), node.map(g, alloc)
+    assert np.array_equal(np.sort(rn.task_to_proc), np.arange(g.n))
+    ef, en = evaluate(g, alloc, rf), evaluate(g, alloc, rn)
+    assert en["weighted_hops"] <= 1.05 * ef["weighted_hops"]
+    base = evaluate(g, alloc, identity_mapping(g, alloc))
+    assert en["weighted_hops"] <= base["weighted_hops"]
+
+
+def test_hier_point_reduction_matches_cores_per_node():
+    m, alloc, g = _xk7_case()
+    flat = Mapper(MapperConfig(sfc="FZ")).map(g, alloc)
+    node = Mapper(MapperConfig(sfc="FZ", hierarchy="node")).map(g, alloc)
+    assert flat.stats["sweep_points"] == 2 * g.n
+    assert node.stats["sweep_points"] == 2 * g.n // 16
+    assert flat.stats["sweep_points"] / node.stats["sweep_points"] == 16
+    assert node.stats["cores_per_node"] == 16
+    assert node.stats["nclusters"] == node.stats["nrouters"] == g.n // 16
+
+
+def test_coarse_score_equals_fine_weighted_hops():
+    """Every task carries its node's router coordinates, so the
+    contracted graph's weighted_hops is EXACTLY the fine mapping's."""
+    m, alloc, g = _xk7_case(nfragments=2, seed=5)
+    rn = Mapper(MapperConfig(sfc="FZ", hierarchy="node")).map(g, alloc)
+    fine = evaluate(g, alloc, rn)["weighted_hops"]
+    assert rn.score == rn.stats["refine_final"] == fine
+
+
+def test_hierarchy_flat_is_default_and_unchanged():
+    m, alloc, g = _xk7_case(nfragments=2, seed=3)
+    default = Mapper(MapperConfig(sfc="FZ", rotations=4)).map(g, alloc)
+    flat = Mapper(MapperConfig(sfc="FZ", rotations=4,
+                               hierarchy="flat")).map(g, alloc)
+    assert np.array_equal(default.task_to_proc, flat.task_to_proc)
+    assert default.stats["hierarchy"] == "flat"
+
+
+def test_invalid_hierarchy_rejected():
+    m, alloc, g = _xk7_case(nfragments=1)
+    with pytest.raises(ValueError, match="hierarchy"):
+        MappingPipeline(PipelineConfig(hierarchy="bogus")).map(g, alloc)
+
+
+def test_hier_machine_without_core_dims():
+    """No core dims: one cluster per router (degenerate coarsening) —
+    still a valid bijection, never worse than identity."""
+    m = make_machine((16, 16), wrap=True)
+    alloc = sfc_allocation(m, 64, nfragments=4, seed=7)
+    g = stencil_graph((8, 8))
+    res = MappingPipeline(PipelineConfig(hierarchy="node")).map(g, alloc)
+    assert np.array_equal(np.sort(res.task_to_proc), np.arange(64))
+    base = evaluate(g, alloc, identity_mapping(g, alloc))
+    assert evaluate(g, alloc, res)["weighted_hops"] \
+        <= base["weighted_hops"]
+
+
+def test_hier_fewer_tasks_than_nodes():
+    m = gemini_xk7(dims=(8, 4, 4), cores_per_node=16)
+    alloc = sfc_allocation(m, 64 * 16, seed=0)  # 64 routers
+    g = stencil_graph((16, 16))  # 256 tasks -> 16 clusters of 16
+    res = MappingPipeline(PipelineConfig(hierarchy="node")).map(g, alloc)
+    assert res.stats["nclusters"] == 16
+    procs = np.unique(res.task_to_proc)
+    assert len(procs) == 256  # distinct cores (16 routers x 16 cores)
+    routers = np.unique(alloc.coords[res.task_to_proc][:, :3], axis=0)
+    assert len(routers) == 16
+
+
+def test_hier_bijection_with_uneven_router_core_counts():
+    """nnodes not a multiple of cores_per_node trims the last router:
+    the expansion must spill over-capacity tasks to free cores instead
+    of oversubscribing the trimmed node (was a silent bijection break)."""
+    m = gemini_xk7(dims=(4, 4, 4), cores_per_node=16)
+    alloc = sfc_allocation(m, 100, seed=0)  # 6 full routers + 4 cores
+    g = stencil_graph((10, 10))
+    res = MappingPipeline(PipelineConfig(hierarchy="node")).map(g, alloc)
+    assert np.array_equal(np.sort(res.task_to_proc), np.arange(100))
+
+
+def test_hier_hilbert_sfc():
+    """sfc="H" runs Hilbert numbering through aggregation and the
+    coarse sweep (no silent substitution)."""
+    m, alloc, g = _xk7_case(side=4, nfragments=2, seed=2)
+    res = MappingPipeline(PipelineConfig(sfc="H",
+                                         hierarchy="node")).map(g, alloc)
+    assert np.array_equal(np.sort(res.task_to_proc), np.arange(g.n))
+    base = evaluate(g, alloc, identity_mapping(g, alloc))
+    assert evaluate(g, alloc, res)["weighted_hops"] \
+        <= base["weighted_hops"]
+
+
+def test_hier_oversubscribed_cores():
+    m = gemini_xk7(dims=(4, 4, 2), cores_per_node=4)
+    alloc = sfc_allocation(m, 64, seed=0)  # 16 routers x 4 cores
+    g = stencil_graph((16, 8))  # 128 tasks on 64 cores
+    res = MappingPipeline(PipelineConfig(hierarchy="node")).map(g, alloc)
+    counts = np.bincount(res.task_to_proc, minlength=64)
+    assert (counts == 2).all()  # even 2-task-per-core round-robin
+
+
+# ---------------------------------------------------------------------------
+# refinement
+# ---------------------------------------------------------------------------
+
+def _coarse_problem(seed=0, nclusters=48, side=8):
+    rng = np.random.default_rng(seed)
+    machine = make_machine((side, side), wrap=True)
+    routers = np.stack(np.unravel_index(
+        rng.choice(side * side, nclusters, replace=False), (side, side)),
+        axis=1)
+    g = stencil_graph((8, nclusters // 8))
+    agg = aggregate_tasks(g, nclusters)
+    return machine, agg.coarse, routers
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_refine_monotone_from_scrambled_start(seed):
+    machine, coarse, routers = _coarse_problem(seed)
+    rng = np.random.default_rng(seed + 100)
+    c2r = rng.permutation(len(routers))
+    c2r, stats = refine_swaps(machine, coarse, routers, c2r,
+                              rounds=6, top=16, degree=4)
+    hist = [h[0] for h in stats["refine_history"]]
+    assert all(b <= a + 1e-9 for a, b in zip(hist, hist[1:]))
+    assert stats["refine_final"] <= stats["refine_initial"]
+    # a scrambled start has plenty of slack: refinement must find some
+    assert stats["refine_final"] < stats["refine_initial"]
+    # the refined assignment is still a valid injection
+    assert len(np.unique(c2r)) == len(c2r)
+    # reported final score matches a fresh evaluation
+    ev = evaluate_candidates(machine, coarse.edges, coarse.weights,
+                             routers[c2r][None])
+    assert np.isclose(ev["weighted_hops"][0], stats["refine_final"])
+
+
+def test_refine_noop_on_optimal_line():
+    """A contiguous 1D chain on a line of routers is hop-optimal:
+    refinement must accept nothing and change nothing."""
+    machine = make_machine((16,), wrap=False)
+    g = stencil_graph((16,))
+    coarse = TaskGraph(g.coords, g.edges, g.weights)
+    routers = np.arange(16)[:, None]
+    c2r, stats = refine_swaps(machine, coarse, routers, np.arange(16),
+                              rounds=3, top=8, degree=2)
+    assert np.array_equal(c2r, np.arange(16))
+    assert stats["refine_final"] == stats["refine_initial"]
+
+
+def test_refine_latency_objective_monotone():
+    """Non-separable (latency) objectives take the full-stack scoring
+    path and must stay monotone too."""
+    machine, coarse, routers = _coarse_problem(2)
+    rng = np.random.default_rng(9)
+    start = rng.permutation(len(routers))
+    c2r, stats = refine_swaps(
+        machine, coarse, routers, start, rounds=3, top=12, degree=3,
+        objective=("latency_max", "weighted_hops"))
+    hist = stats["refine_history"]
+    for a, b in zip(hist, hist[1:]):
+        assert tuple(b) <= tuple(a)
+
+
+def test_assign_cores_groups_clusters_on_nodes():
+    m = gemini_xk7(dims=(4, 4, 2), cores_per_node=8)
+    alloc = sfc_allocation(m, 4 * 8, seed=1)
+    rc, core_router, _ = router_view(alloc)
+    g = stencil_graph((8, 4))
+    agg = aggregate_tasks(g, 4)
+    c2r = np.array([2, 0, 3, 1])
+    t2p = assign_cores(agg.labels, c2r, core_router, g.coords, len(rc))
+    assert np.array_equal(np.sort(t2p), np.arange(32))
+    # every task of a cluster lands on its assigned router
+    for c in range(4):
+        rows = alloc.coords[t2p[agg.labels == c]]
+        assert (rows[:, :3] == rc[c2r[c]]).all()
+
+
+# ---------------------------------------------------------------------------
+# meshmap wiring
+# ---------------------------------------------------------------------------
+
+def test_select_mapping_hierarchy_node_never_worse_than_default():
+    from repro.meshmap.device_mesh import select_mapping
+    m = tpu_v5e_multipod(npods=2, side=4)
+    alloc = Allocation(m, np.stack(np.unravel_index(
+        np.arange(32), m.dims), axis=1))
+    ab = (1.0, 8.0, 64.0)
+    g = logical_mesh_graph((2, 4, 4), ab)
+    best, best_m, base_m = select_mapping(g, alloc, ab, rotations=4,
+                                          hierarchy="node")
+    assert best_m["latency_max"] <= base_m["latency_max"] + 1e-9
+    assert np.array_equal(np.sort(best.task_to_proc), np.arange(32))

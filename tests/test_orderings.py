@@ -113,6 +113,23 @@ def test_weighted_cut_balances_weight():
     assert abs(w[left].sum() - w.sum() / 2) <= w.max()
 
 
+def test_weighted_hilbert_split():
+    """Weighted Hilbert parts split on the EXCLUSIVE weight prefix:
+    equal weights with n == nparts must be a permutation (the old
+    inclusive cumsum left part 0 empty and doubled the last part), and
+    unequal weights must balance total weight across parts."""
+    n = 64
+    coords = np.random.default_rng(0).normal(size=(n, 2))
+    mu = order_points(coords, n, "H", weights=np.full(n, 16.0))
+    assert sorted(mu.tolist()) == list(range(n))
+    w = np.ones(n)
+    w[:8] = 8.0
+    mu2 = order_points(coords, 4, "H", weights=w)
+    assert mu2.min() == 0 and mu2.max() == 3
+    per_part = np.bincount(mu2, weights=w, minlength=4)
+    assert per_part.max() <= w.sum() / 4 + w.max()
+
+
 def test_uneven_prime_split():
     """Z2_2: nparts=20=2^2*5 -> first split 8/12 (2/5 vs 3/5)."""
     n = 100
