@@ -116,7 +116,8 @@ class MapperConfig:
     backend        : partitioner engine ("vectorized" or "recursive").
     sweep          : rotation-sweep mode ("batched" = ~2 engine passes
                      for the whole sweep; "loop" = per-candidate oracle).
-    score_backend  : candidate scoring engine ("numpy" or "jax").
+    score_backend  : candidate scoring engine ("numpy", "jax" or
+                     "pallas"; silent pallas -> jax -> numpy fallback).
     hierarchy      : "flat" (one point per core, classic) or "node"
                      (coarsen -> map at router granularity -> refine;
                      :mod:`repro.hier`).

@@ -27,8 +27,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.metrics import evaluate_candidates, pairwise_hops
+from repro.core.metrics import get_evaluator, pairwise_hops
 from repro.core.orderings import hilbert_key
+
+# host-memory cap on a proposal-round's edited coordinate stacks (the
+# per-slice build below; one slice for every realistic round)
+_STACK_BYTE_BUDGET = 1 << 28
 
 
 def assign_cores(
@@ -99,17 +103,22 @@ def _pad_stack(stack: np.ndarray, ndim: int) -> np.ndarray:
     return np.concatenate([stack, z], axis=-1)
 
 
-def _scores(machine, edges, weights, stack, objective, backend):
+def _scores(machine, edges, weights, stack, objective, evaluator,
+            chunk_elems: int = 1 << 24):
     """(B, len(objective)) score matrix for a coordinate stack.
 
-    Hops-only objectives read just the network columns, so the stack is
-    zero-padded to the machine's full ndim only when the batched router
-    runs (traffic objectives index every machine dimension)."""
+    ``evaluator`` is a RESOLVED scoring callable (one
+    :func:`repro.core.metrics.get_evaluator` call per refinement run,
+    hoisted out of the swap loop instead of re-walking the backend
+    fallback chain per scoring pass).  Hops-only objectives read just
+    the network columns, so the stack is zero-padded to the machine's
+    full ndim only when the batched router runs (traffic objectives
+    index every machine dimension)."""
     traffic = any(k in ("latency_max", "data_max") for k in objective)
     if traffic:
         stack = _pad_stack(stack, machine.ndim)
-    ev = evaluate_candidates(machine, edges, weights, stack,
-                             traffic=traffic, backend=backend)
+    ev = evaluator(machine, edges, weights, stack, traffic=traffic,
+                   chunk_elems=chunk_elems)
     return np.stack([np.asarray(ev[k], dtype=np.float64)
                      for k in objective], axis=1)
 
@@ -143,8 +152,16 @@ def refine_swaps(
     objective, take the ``top`` hottest, and propose exchanging each with
     the occupants of its ``degree`` network-nearest allocated routers
     (a move when the target router is empty).  All proposals of a round
-    are scored in batched ``evaluate_candidates`` passes (chunked to
-    bound memory).  For sum-separable objectives (``weighted_hops``,
+    are scored through batched ``evaluate_candidates`` entries: the
+    edited proposal stacks are built with two vectorised scatters in
+    slices of at least ``chunk`` proposals (one slice for every
+    realistic round — slices exist only to bound host memory), and the
+    evaluator bounds device memory internally, so a round no longer
+    re-enters Python per proposal and an accelerator backend typically
+    sees it as a single launch.  The backend named by
+    ``score_backend`` ("numpy", "jax" or "pallas") is resolved ONCE
+    per call via :func:`repro.core.metrics.get_evaluator` and reused
+    for every round.  For sum-separable objectives (``weighted_hops``,
     ``total_hops``) the pass restricts the edge list to edges incident
     to a touched cluster — a proposal only moves two clusters, so
     ``score = base_full - base_union + union(proposal)`` is EXACT while
@@ -162,6 +179,7 @@ def refine_swaps(
     Returns ``(refined cluster_to_router, stats)`` where stats carries
     the per-round objective history and acceptance counts.
     """
+    _, evaluator = get_evaluator(score_backend)  # hoisted: resolve once
     router_coords = np.asarray(router_coords, dtype=np.int64)
     c2r = np.asarray(cluster_to_router, dtype=np.int64).copy()
     nclusters = len(c2r)
@@ -176,7 +194,7 @@ def refine_swaps(
     separable = all(k in ("weighted_hops", "total_hops") for k in objective)
 
     base = _scores(machine, edges, w, router_coords[c2r][None],
-                   objective, score_backend)[0]
+                   objective, evaluator)[0]
     history = [base.copy()]
     accepted_total = 0
     evaluated_total = 0
@@ -249,7 +267,7 @@ def refine_swaps(
             s_edges = remap[s_edges]
             s_cc = cc[uc]
             base_union = _scores(machine, s_edges, s_w, s_cc[None],
-                                 objective, score_backend)[0]
+                                 objective, evaluator)[0]
             offset = base - base_union
         else:
             s_edges, s_w = edges, w
@@ -257,19 +275,30 @@ def refine_swaps(
             s_cc = cc
             offset = np.zeros_like(base)
 
-        # score every proposal: base stack with the swapped rows edited
+        # score every proposal through ONE batched entry per (large)
+        # slice: the edited stacks are built with two vectorised
+        # scatters (a proposal only swaps two rows of the base stack)
+        # and the evaluator chunks internally — no per-proposal Python
+        # re-entry, so an accelerator backend sees a whole slice as one
+        # launch.  Slices exist only to bound HOST memory: at least
+        # ``chunk`` proposals each, growing to whatever fits the stack
+        # byte budget (one slice for every realistic round).
         nb = len(proposals)
+        prop = np.asarray(proposals, dtype=np.int64)  # (nb, 4) columns
+        a_c, ra_c, b_c, rb_c = prop.T
+        rows_a = remap[a_c]
+        rows_b = np.where(b_c >= 0, remap[np.maximum(b_c, 0)], -1)
+        sc = max(max(chunk, 1), _STACK_BYTE_BUDGET // max(s_cc.nbytes, 1))
         scores = np.empty((nb, len(base)))
-        for c0 in range(0, nb, chunk):
-            batch = proposals[c0:c0 + chunk]
-            stack = np.repeat(s_cc[None], len(batch), axis=0)
-            for i, (a, ra, b, rb) in enumerate(batch):
-                if remap[a] >= 0:
-                    stack[i, remap[a]] = router_coords[rb]
-                if b >= 0 and remap[b] >= 0:
-                    stack[i, remap[b]] = router_coords[ra]
-            scores[c0:c0 + chunk] = offset + _scores(
-                machine, s_edges, s_w, stack, objective, score_backend)
+        for c0 in range(0, nb, sc):
+            sl = slice(c0, min(c0 + sc, nb))
+            stack = np.repeat(s_cc[None], sl.stop - c0, axis=0)
+            va = np.flatnonzero(rows_a[sl] >= 0)
+            stack[va, rows_a[sl][va]] = router_coords[rb_c[sl][va]]
+            vb = np.flatnonzero(rows_b[sl] >= 0)
+            stack[vb, rows_b[sl][vb]] = router_coords[ra_c[sl][vb]]
+            scores[sl] = offset + _scores(
+                machine, s_edges, s_w, stack, objective, evaluator)
 
         # greedy disjoint accept, best improvement first
         order = np.lexsort(tuple(scores[:, j]
@@ -300,7 +329,7 @@ def refine_swaps(
 
         new_c2r, new_r2c = _apply(chosen)
         combined = _scores(machine, edges, w, router_coords[new_c2r][None],
-                           objective, score_backend)[0]
+                           objective, evaluator)[0]
         if len(chosen) > 1 and not _lex_less(combined, base):
             # accepted swaps interacted badly: keep only the best one,
             # whose exact score is already known to beat the base

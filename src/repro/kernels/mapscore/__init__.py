@@ -1,0 +1,13 @@
+"""Fused candidate-scoring kernel (Pallas TPU) for the mapping sweep.
+
+Layout mirrors the repo's other kernels (flash_attention, ssd):
+
+- :mod:`ref`    — numpy oracle of the kernel contract;
+- :mod:`kernel` — the Pallas TPU kernel (per-candidate grid dimension,
+  message tiles streamed through VMEM, difference-array range-add in
+  VMEM link-load scratch, on-chip metric reduction);
+- :mod:`ops`    — the jit-friendly public wrapper with shape bucketing,
+  a keyed compile cache and the ``evaluate_candidates`` contract.
+"""
+
+from .ops import evaluate_candidates_pallas, scorer_cache_stats  # noqa: F401

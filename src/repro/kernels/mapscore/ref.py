@@ -1,0 +1,54 @@
+"""Numpy oracle of the mapscore kernel contract.
+
+The kernel scores a stack of candidate mappings — per candidate the
+weighted/total hop sums and, for traffic objectives, the max directed
+link load and max link latency under dimension-ordered routing.  This
+reference produces exactly those quantities through the repo's
+parity-tested numpy router (:mod:`repro.core.metrics`), so the
+interpret-mode suite in ``tests/test_mapscore.py`` pins the kernel to
+the same spec every other backend answers to.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.machine import Machine
+from repro.core.metrics import _batched_route, pairwise_hops
+
+
+def mapscore_ref(machine: Machine, src: np.ndarray, dst: np.ndarray,
+                 w: np.ndarray, *, traffic: bool = True) -> dict:
+    """Per-candidate metric sums for message stacks.
+
+    src, dst : (B, E, ndim) int machine coordinates per message.
+    w        : (E,) message weights (shared across candidates).
+
+    Returns (B,) arrays: ``weighted_hops``, ``total_hops`` and — when
+    ``traffic`` — ``data_max`` / ``latency_max``.  Zero-length messages
+    (src == dst) and zero-weight padding rows contribute exact zeros,
+    matching the kernel's padded-bucket semantics.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    w = np.asarray(w, dtype=np.float64)
+    h = pairwise_hops(machine, src, dst)
+    out = {
+        "weighted_hops": (h * w[None]).sum(axis=-1),
+        "total_hops": h.sum(axis=-1),
+    }
+    if traffic:
+        nb = len(src)
+        nd = machine.ndim - machine.core_dims
+        pos, neg = _batched_route(machine, src, dst, w)
+        data = np.zeros(nb)
+        lat = np.zeros(nb)
+        for k in range(nd):
+            bw_full = machine.bw_field(k)[None]
+            for arr in (pos[k], neg[k]):
+                data = np.maximum(data, arr.reshape(nb, -1).max(axis=1))
+                lat = np.maximum(lat,
+                                 (arr / bw_full).reshape(nb, -1).max(axis=1))
+        out["data_max"] = data
+        out["latency_max"] = lat
+    return out

@@ -91,8 +91,11 @@ class CandidateSearch:
         Ties keep the EARLIER candidate, so listing the identity /
         default mapping first guarantees never-worse-than-default.
     backend : scoring engine — ``"numpy"`` (default, bit-exact
-        reference) or ``"jax"`` (jit-compiled accelerator path; falls
-        back to numpy when jax is unavailable).
+        reference), ``"jax"`` (jit-compiled ``segment_sum`` path) or
+        ``"pallas"`` (fused on-chip kernel,
+        :mod:`repro.kernels.mapscore`); non-numpy backends fall back
+        silently down the pallas -> jax -> numpy chain when an import
+        fails.
     """
 
     def __init__(self, objective="weighted_hops", backend="numpy"):

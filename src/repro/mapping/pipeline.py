@@ -69,9 +69,12 @@ class PipelineConfig:
                   permutations of each side); "loop" runs
                   ``map_candidate`` per candidate — the bit-identical
                   oracle the ``candidates`` benchmark times against.
-      score_backend : candidate scoring engine, "numpy" (default) or
-                  "jax" (jit-compiled; silent numpy fallback when jax
-                  is unavailable).
+      score_backend : candidate scoring engine — "numpy" (default),
+                  "jax" (jit-compiled, message counts bucketed to
+                  power-of-two shapes so scenarios compile O(1) times)
+                  or "pallas" (one fused kernel launch per stack,
+                  :mod:`repro.kernels.mapscore`); silent fallback down
+                  the pallas -> jax -> numpy chain.
 
     Hierarchy stage (:mod:`repro.hier`):
       hierarchy : "flat" partitions one point per core (classic);

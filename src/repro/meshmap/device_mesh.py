@@ -111,8 +111,11 @@ def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
     ~2 batched engine passes, and the outer selection scores every
     candidate in one batched (Latency(M), WeightedHops) pass
     (``score_backend="jax"`` routes it through the jit-compiled
-    scorer).  The identity/default mapping is listed first, so on ties
-    the search is never worse than jax's enumeration order.
+    scorer; ``"pallas"`` through the fused on-chip kernel of
+    :mod:`repro.kernels.mapscore`, falling back jax -> numpy when the
+    kernel stack is unavailable).  The identity/default mapping is
+    listed first, so on ties the search is never worse than jax's
+    enumeration order.
 
     ``hierarchy="node"`` routes each pipeline call through the
     hierarchical coarsen -> map -> refine subsystem (:mod:`repro.hier`)
