@@ -1,0 +1,183 @@
+"""Benchmark-regression gate: diff a ``run.py --json`` output against a
+committed baseline and FAIL on regression (ISSUE 5).
+
+Usage (the CI ``bench-guards`` job):
+
+    python benchmarks/run.py --json bench-results.json
+    python benchmarks/compare.py bench-results.json \
+        --baseline benchmarks/baseline.json
+
+    # regenerate the baseline after an intentional change:
+    python benchmarks/compare.py bench-results.json \
+        --write-baseline benchmarks/baseline.json
+
+What is compared is declared per benchmark in :data:`POLICY`, in three
+classes:
+
+- ``exact``   : metric ORACLES — winner/identity/monotonicity flags the
+                benchmarks compute deterministically.  Any drift fails.
+- ``near``    : quality metrics (mapping-quality ratios).  Deterministic
+                on one host, but allowed ``rtol`` relative drift so a
+                numpy/BLAS version bump does not false-positive.
+- ``min_ratio``: speedup ratios (higher is better).  The current value
+                must stay >= ``frac`` x baseline — a loose floor that
+                catches real regressions (a batched path silently
+                falling back to a loop) while tolerating runner noise.
+
+Timing fields (``us_per_call``, ``*_us``) are never compared — wall
+clocks differ per host; the ratios already normalise them.
+
+The gate also fails when a baseline benchmark is missing from the
+current run, when a current record is not ``ok``, or when the run MODE
+(smoke/default/full) differs from the baseline's — cross-mode ratio
+comparisons are meaningless.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# benchmark name -> comparison classes (keys are ``derived`` fields)
+POLICY = {
+    "partition": {"min_ratio": {"best": 0.5}},
+    "candidates": {"exact": ["winner_identical", "winner"],
+                   "min_ratio": {"speedup": 0.5}},
+    "mapscore": {"exact": ["winner_identical"]},
+    "serve": {"exact": ["coalesced_identical", "warm_identical"],
+              "min_ratio": {"warm_speedup": 0.5}},
+    "hier": {"exact": ["refine_monotone"],
+             "near": {"wh_ratio": 0.05, "wh_ratio_sparse": 0.05,
+                      "points_ratio": 0.02},
+             "min_ratio": {"flat_vs_hier": 0.5}},
+    "table1_orderings": {"exact": ["rows"],
+                         "near": {"max_rel_err_vs_paper_ZFZMFZ": 0.10}},
+    "minighost": {"near": {"lat_red_vs_default": 0.10,
+                           "geo_growth": 0.10}},
+    "homme_bgq": {"near": {"best_data_vs_sfc": 0.10}},
+    "homme_titan": {"near": {"z2_2_wh_vs_sfc": 0.10,
+                             "z2_2_lat_vs_sfc": 0.25}},
+}
+
+_TIMING_SUFFIXES = ("_us", "_s")
+
+
+def _mode(doc: dict) -> str:
+    if doc.get("full"):
+        return "full"
+    if doc.get("smoke"):
+        return "smoke"
+    return "default"
+
+
+def _by_name(doc: dict) -> dict:
+    """records list (run.py output) OR baseline mapping -> {name: rec}."""
+    bench = doc.get("benchmarks", doc)
+    if isinstance(bench, dict):
+        return bench
+    return {r["name"]: r for r in bench}
+
+
+def compare(current: dict, baseline: dict) -> list[str]:
+    """All regression problems of ``current`` vs ``baseline`` (empty =
+    gate passes)."""
+    problems = []
+    if _mode(current) != _mode(baseline):
+        return [f"run mode {_mode(current)!r} != baseline mode "
+                f"{_mode(baseline)!r}; compare like against like"]
+    cur = _by_name(current)
+    base = _by_name(baseline)
+    for name, brec in sorted(base.items()):
+        crec = cur.get(name)
+        if crec is None:
+            problems.append(f"{name}: missing from the current run")
+            continue
+        if not crec.get("ok", False):
+            problems.append(
+                f"{name}: current run failed: "
+                f"{crec.get('error', 'ok=false')}")
+            continue
+        policy = POLICY.get(name, {})
+        cd = crec.get("derived", {})
+        bd = brec.get("derived", {})
+        for key in policy.get("exact", []):
+            if key not in bd:
+                continue  # baseline predates the field
+            if key not in cd:
+                problems.append(f"{name}: oracle field {key!r} missing")
+            elif cd[key] != bd[key]:
+                problems.append(
+                    f"{name}: oracle {key} changed: "
+                    f"{bd[key]!r} -> {cd[key]!r}")
+        for key, rtol in policy.get("near", {}).items():
+            if key not in bd:
+                continue
+            if key not in cd:
+                problems.append(f"{name}: metric field {key!r} missing")
+                continue
+            b, c = float(bd[key]), float(cd[key])
+            if abs(c - b) > rtol * max(abs(b), 1e-12):
+                problems.append(
+                    f"{name}: {key} drifted beyond {rtol:.0%}: "
+                    f"{b:.6g} -> {c:.6g}")
+        for key, frac in policy.get("min_ratio", {}).items():
+            if key not in bd:
+                continue
+            if key not in cd:
+                problems.append(f"{name}: ratio field {key!r} missing")
+                continue
+            b, c = float(bd[key]), float(cd[key])
+            if c < frac * b:
+                problems.append(
+                    f"{name}: {key} regressed below {frac:.0%} of "
+                    f"baseline: {b:.3g} -> {c:.3g}")
+    return problems
+
+
+def make_baseline(current: dict) -> dict:
+    """Strip a run into a committed baseline: names, ok flags and
+    non-timing derived fields (timings never gate)."""
+    out = {}
+    for name, rec in sorted(_by_name(current).items()):
+        derived = {
+            k: v for k, v in rec.get("derived", {}).items()
+            if not any(k.endswith(sfx) for sfx in _TIMING_SUFFIXES)
+        }
+        out[name] = {"ok": bool(rec.get("ok", False)), "derived": derived}
+    return {"benchmarks": out, "full": bool(current.get("full")),
+            "smoke": bool(current.get("smoke"))}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="run.py --json output to check")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write PATH from the current run and exit")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    if args.write_baseline:
+        with open(args.write_baseline, "w") as f:
+            json.dump(make_baseline(current), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[compare] wrote baseline {args.write_baseline}")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    problems = compare(current, baseline)
+    for p in problems:
+        print(f"[compare] REGRESSION: {p}")
+    if problems:
+        print(f"[compare] FAIL: {len(problems)} regression(s) vs "
+              f"{args.baseline}")
+        return 1
+    n = len(_by_name(baseline))
+    print(f"[compare] OK: {n} benchmark(s) within policy vs "
+          f"{args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,13 @@ trajectory.
                      jax-vs-pallas wall-clock ratio for the bench
                      trajectory, and a >=5x floor where a TPU is
                      available
+  serve            : mapping-as-a-service cold vs warm vs coalesced
+                     throughput (ISSUE 5): scenario-registry requests
+                     through one MappingService — warm responses must
+                     be cache hits bit-identical to the cold pipeline
+                     pass, coalesced duplicates must match a solo
+                     request bit for bit, and the warm path must beat
+                     the >=50x latency floor (skipped in --smoke)
   hier             : flat vs hierarchical (coarsen->map->refine) engine
                      on sparse XK7 scenarios — records the flat-vs-hier
                      wall-clock ratio, the ~cores_per_node x engine-pass
@@ -164,7 +171,7 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (hier, homme_bgq, homme_titan, mapping_tpu,
-                            minighost, roofline, table1_orderings)
+                            minighost, roofline, serve, table1_orderings)
 
     def partition_bench():
         """Vectorised level-synchronous engine vs recursive reference.
@@ -440,6 +447,24 @@ def main() -> None:
                 f"pallas scorer speedup {ratio:.1f}x below the "
                 f"{floor:.0f}x floor vs the jax backend")
 
+    def serve_bench():
+        """Mapping-as-a-service: cold vs warm vs coalesced (ISSUE 5).
+
+        Every mode runs the full oracle set (warm/coalesced results
+        bit-identical to the cold pipeline pass, exact status
+        accounting); the >=50x warm-path floor is enforced at the
+        default scale and above, where the cold pipeline pass is long
+        enough for the ratio to mean something.
+        """
+        if args.full:
+            serve.main()  # 2^14-scale scenarios
+            return
+        scale = (1 << 9) if args.smoke else (1 << 12)
+        results = serve.run(scale=scale, quiet=True,
+                            check_speed=not args.smoke)
+        t = results["t_warm_s"] / results["nscenarios"]
+        print(f"serve,{t*1e6:.0f},{serve.headline(results)}")
+
     def hier_bench():
         """Flat vs hierarchical (coarsen -> map -> refine) engine.
 
@@ -515,6 +540,7 @@ def main() -> None:
         "partition": partition_bench,
         "candidates": candidates_bench,
         "mapscore": mapscore_bench,
+        "serve": serve_bench,
         "hier": hier_bench,
         "table1_orderings": table1,
         "minighost": mini,
@@ -531,7 +557,8 @@ def main() -> None:
         ok = _run(name, fn, records) and ok
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"benchmarks": records, "full": bool(args.full)},
+            json.dump({"benchmarks": records, "full": bool(args.full),
+                       "smoke": bool(args.smoke)},
                       f, indent=2, sort_keys=True)
         print(f"[run] wrote {len(records)} records to {args.json}")
     sys.exit(0 if ok else 1)

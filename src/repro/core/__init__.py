@@ -14,6 +14,9 @@ from .metrics import (Traffic, average_hops, data_metric,
                       evaluate_candidates, evaluate_mapping, latency_metric,
                       pairwise_hops, per_dim_stats, route_traffic,
                       total_hops, weighted_hops)
+from .signature import (allocation_signature, array_digest,
+                        config_signature, machine_signature,
+                        mapping_signature, taskgraph_signature)
 from .orderings import (BACKENDS, SFC_KINDS, gray_decode, gray_encode,
                         grid_order, hilbert_index, hilbert_key,
                         order_points, order_points_batched,
@@ -27,18 +30,22 @@ from .transforms import (apply_permutation, box_lift, drop_dims,
 __all__ = [
     "Allocation", "BACKENDS", "Machine", "Mapper", "MapperConfig",
     "MappingResult", "SFC_KINDS", "TaskGraph", "Traffic",
+    "allocation_signature", "array_digest",
     "apply_permutation", "average_hops", "bgq", "block_allocation",
-    "box_lift", "closest_subset", "cube_coords", "cube_sphere_graph",
+    "box_lift", "closest_subset", "config_signature", "cube_coords",
+    "cube_sphere_graph",
     "data_metric", "drop_dims", "evaluate", "evaluate_candidates",
     "evaluate_mapping", "face2d_coords", "gemini_xk7", "geometric_map",
     "gray_decode", "gray_encode", "grid_order", "hilbert_index",
     "hilbert_key", "identity_mapping", "latency_metric",
     "logical_mesh_graph",
+    "machine_signature", "mapping_signature",
     "make_machine", "normalize_extents", "order_points",
     "order_points_batched", "order_points_recursive",
     "pairwise_hops", "per_dim_stats",
     "permutations", "random_allocation", "route_traffic",
     "scale_by_bandwidth", "sfc_allocation", "shift_torus",
-    "stencil_graph", "total_hops", "tpu_v4_cube", "tpu_v5e_multipod",
+    "stencil_graph", "taskgraph_signature", "total_hops",
+    "tpu_v4_cube", "tpu_v5e_multipod",
     "tpu_v5e_pod", "weighted_hops",
 ]

@@ -375,8 +375,8 @@ def data_metric(traffic: Traffic) -> float:
 
 def latency_metric(traffic: Traffic) -> float:
     """Latency(M) = max over links of Data(e)/bw(e)  (Eqn. 7)."""
-    l = traffic.link_latency()
-    return float(l.max()) if len(l) else 0.0
+    lat = traffic.link_latency()
+    return float(lat.max()) if len(lat) else 0.0
 
 
 def per_dim_stats(traffic: Traffic) -> dict:

@@ -433,7 +433,6 @@ def hilbert_index(X: np.ndarray, bits: int) -> np.ndarray:
 
 def _hilbert_grid(shape: tuple[int, ...], bits: int) -> np.ndarray:
     ix = np.indices(shape)
-    d = len(shape)
     pts = np.stack([c.ravel() for c in ix], axis=1)
     h = hilbert_index(pts, bits)
     # ranks = part numbers (h is a permutation of 0..n-1 for full grids)

@@ -295,13 +295,12 @@ def _fast_order(coords, nparts, sfc, w, dim_orders, longest_dim,
     q_buf = np.empty_like(Q) if d > 1 else Q  # partition double-buffer
     g_loc = np.empty(npts, dtype=bool) if d > 1 else None  # per-block
     loc = np.arange(npts, dtype=np.int32) if d > 1 else None
-    pos = pos32 = None  # built lazily: unused on the pure-1D fast path
+    pos = None  # built lazily: unused on the pure-1D fast path
 
     def _positions():
-        nonlocal pos, pos32
+        nonlocal pos
         if pos is None:
             pos = np.arange(N, dtype=np.int64)
-            pos32 = pos.astype(np.int32)
         return pos
 
     cut_base = np.arange(1, npts + 1, dtype=np.float64)

@@ -21,15 +21,12 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
-import re
 import time
 import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs import ARCHS, get_config

@@ -280,7 +280,6 @@ def analyze(text: str) -> dict:
             dims = _first_shape_dims(ins.shape_str)
             if dims is not None:
                 shapes[ins.name] = dims
-    sizes = {name: None for name in shapes}
 
     flops = 0.0
     bytes_hbm = 0.0

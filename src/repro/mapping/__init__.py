@@ -22,9 +22,10 @@ there is exactly one rotation/candidate-search loop in the codebase.
 
 from .candidates import Candidate, CandidateSearch, rotation_candidates
 from .pipeline import (MappingPipeline, MappingResult, PipelineConfig,
-                       match_parts)
+                       match_parts, shared_pipeline)
 
 __all__ = [
     "Candidate", "CandidateSearch", "MappingPipeline", "MappingResult",
     "PipelineConfig", "match_parts", "rotation_candidates",
+    "shared_pipeline",
 ]

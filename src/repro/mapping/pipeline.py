@@ -27,6 +27,7 @@ search implementation.
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -105,6 +106,38 @@ class PipelineConfig:
     refine_rounds: int = 2
     refine_top: int = 64
     refine_degree: int = 4
+
+
+# Process-wide pipeline registry: one MappingPipeline per distinct
+# config.  Pipelines are stateless between map() calls but EXPENSIVE to
+# warm (the jax/pallas scorers compile per (machine, bucket) and those
+# compile caches are module-level), so every repeat-config caller —
+# the serve layer, meshmap's per-call candidate grid, benchmarks —
+# should resolve its pipeline here instead of constructing anew.
+_SHARED_PIPELINES: dict = {}
+_SHARED_LOCK = threading.Lock()
+
+
+def shared_pipeline(config: PipelineConfig | None = None
+                    ) -> "MappingPipeline":
+    """The process-wide :class:`MappingPipeline` for ``config``.
+
+    Keyed by content (:func:`repro.core.signature.config_signature`), so
+    two independently-built equal configs share one pipeline instance
+    and therefore one resolved evaluator — including under concurrent
+    first calls (the serve layer maps from many threads).  The registry
+    never evicts: distinct pipeline configs are few (they are small
+    dataclasses of knobs, not per-request data).
+    """
+    from repro.core.signature import config_signature
+
+    cfg = config or PipelineConfig()
+    key = config_signature(cfg)
+    with _SHARED_LOCK:
+        pipe = _SHARED_PIPELINES.get(key)
+        if pipe is None:
+            pipe = _SHARED_PIPELINES[key] = MappingPipeline(cfg)
+    return pipe
 
 
 class MappingPipeline:

@@ -24,7 +24,7 @@ from jax.sharding import Mesh
 from repro.core import (Allocation, block_allocation, evaluate,
                         identity_mapping, logical_mesh_graph,
                         tpu_v5e_multipod, tpu_v5e_pod)
-from repro.mapping import CandidateSearch, MappingPipeline, PipelineConfig
+from repro.mapping import CandidateSearch, PipelineConfig, shared_pipeline
 
 # Relative per-link traffic of one training step along each logical axis
 # (bytes are arbitrary units; only ratios steer the mapper).
@@ -58,7 +58,8 @@ def device_coords(devices, machine) -> np.ndarray:
 def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
                   *, devices=None, machine=None, axis_bytes=None,
                   rotations: int = 16, return_report: bool = False,
-                  score_backend: str = "numpy", hierarchy: str = "flat"):
+                  score_backend: str = "numpy", hierarchy: str = "flat",
+                  service=None):
     """Build a Mesh whose device order minimises modeled link traffic.
 
     Candidate-selection (the paper's §4.3 rotation search, generalised):
@@ -89,7 +90,7 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
     alloc = Allocation(machine, device_coords(devices, machine).astype(int))
     best, best_metrics, base_metrics = select_mapping(
         graph, alloc, ab, rotations=rotations, score_backend=score_backend,
-        hierarchy=hierarchy)
+        hierarchy=hierarchy, service=service)
     order = best.task_to_proc  # logical flat index -> device index
     dev_array = np.array(devices, dtype=object)[order].reshape(axis_sizes)
     mesh = Mesh(dev_array, tuple(axis_names))
@@ -99,7 +100,8 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
 
 
 def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
-                   score_backend: str = "numpy", hierarchy: str = "flat"):
+                   score_backend: str = "numpy", hierarchy: str = "flat",
+                   service=None):
     """Candidate search: default order + FZ mappings under raw and
     traffic-scaled task coordinates x rotations; returns
     (best MappingResult, best metrics, default metrics).
@@ -122,6 +124,14 @@ def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
     — worthwhile on machines with core dims or very large logical
     meshes; on a machine without core dims it degenerates to the
     router-granularity map plus the monotone swap refinement.
+
+    Pipelines come from the process-wide :func:`shared_pipeline`
+    registry (evaluator + compile caches resolved once per config, not
+    once per mesh build).  Passing a :class:`repro.serve.MappingService`
+    as ``service`` additionally serves each candidate pipeline pass
+    through its content-addressed result cache, so REPEAT mesh builds —
+    the same logical shape on the same allocation — skip the geometric
+    search entirely (mapping-as-a-service for the mesh builder).
     """
     candidates = [identity_mapping(graph, alloc)]
     for scaled in (False, True):
@@ -129,10 +139,17 @@ def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
         if scaled:
             tc = tc / np.asarray(axis_bytes, dtype=float)
         for rot in (0, rotations):
-            pipe = MappingPipeline(PipelineConfig(
+            config = PipelineConfig(
                 sfc="FZ", shift=True, bandwidth_scale=True, rotations=rot,
-                score_backend=score_backend, hierarchy=hierarchy))
-            candidates.append(pipe.map(graph, alloc, task_coords=tc))
+                score_backend=score_backend, hierarchy=hierarchy)
+            if service is not None:
+                from repro.serve.engine import MappingRequest
+                resp = service.map(MappingRequest(graph, alloc, config,
+                                                  task_coords=tc))
+                candidates.append(resp.result)
+            else:
+                candidates.append(shared_pipeline(config).map(
+                    graph, alloc, task_coords=tc))
     search = CandidateSearch(objective=("latency_max", "weighted_hops"),
                              backend=score_backend)
     best, _, _ = search.best(graph, alloc, candidates)

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.sharding.rules import logical
 
@@ -213,7 +212,7 @@ def prefill(cfg: ModelConfig, params, batch, max_seq: int | None = None):
     per-layer k/v (dense) or final ssm states.  For simplicity the cache
     is sized to the prompt length unless ``max_seq`` is given.
     """
-    from .transformer import _stack_dense, _stack_hybrid, forward_hidden
+    from .transformer import _stack_dense, _stack_hybrid
 
     tokens = batch["tokens"]
     b, s = tokens.shape

@@ -9,8 +9,6 @@ lax.cond so the scan body stays uniform.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -244,7 +242,6 @@ def _stack_hybrid(cfg, lp, shared, x, positions, *, collect_kv=False):
     """Zamba2-style: mamba backbone + one shared attention block applied
     every cfg.attn_every layers (same weights at every site)."""
     nl = cfg.num_layers
-    idxs = jnp.arange(nl)
     is_site = jnp.asarray(
         [(i + 1) % cfg.attn_every == 0 for i in range(nl)], jnp.int32)
 

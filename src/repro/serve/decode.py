@@ -1,0 +1,77 @@
+"""Batched serving engine: prefill + greedy decode over a KV/SSM cache.
+
+For attention families the prompt is prefETCHED in one forward pass
+(collecting per-layer k/v); SSM/hybrid prompts replay through the
+single-token recurrence inside a lax.fori_loop (state capture during a
+full-sequence SSD pass is an optimisation left to the kernel path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (ModelConfig, decode_step, init_cache, prefill)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int,
+                 batch: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.batch = batch
+        self._step = jax.jit(functools.partial(decode_step, cfg),
+                             donate_argnums=(1,))
+        self._prefill = jax.jit(functools.partial(prefill, cfg),
+                                static_argnames=("max_seq",))
+
+    # -- prompt ingestion ---------------------------------------------------
+
+    def _ingest_attention(self, batch_inputs, prompt_len: int):
+        logits, cache = self._prefill(self.params, batch_inputs,
+                                      max_seq=self.max_seq)
+        return logits[:, -1], cache
+
+    def _ingest_recurrent(self, tokens):
+        cache = init_cache(self.cfg, tokens.shape[0], self.max_seq)
+
+        def body(t, carry):
+            cache, logits = carry
+            lg, cache = decode_step(self.cfg, self.params, cache,
+                                    jax.lax.dynamic_slice_in_dim(
+                                        tokens, t, 1, axis=1),
+                                    t)
+            return cache, lg[:, 0]
+
+        cache, last = jax.lax.fori_loop(
+            0, tokens.shape[1], body,
+            (cache, jnp.zeros((tokens.shape[0], self.cfg.vocab_size),
+                              jnp.dtype(self.cfg.dtype))))
+        return last, cache
+
+    # -- public API ----------------------------------------------------------
+
+    def generate(self, tokens: np.ndarray, *, max_new_tokens: int,
+                 extras: dict | None = None) -> np.ndarray:
+        """Greedy continuation of ``tokens`` (B, prompt_len)."""
+        cfg = self.cfg
+        tokens = jnp.asarray(tokens, jnp.int32)
+        b, plen = tokens.shape
+        inputs = {"tokens": tokens, **(extras or {})}
+        if cfg.family in ("ssm", "hybrid"):
+            ingest = jax.jit(self._ingest_recurrent)
+            last_logits, cache = ingest(tokens)
+        else:
+            last_logits, cache = self._ingest_attention(inputs, plen)
+        out = [jnp.argmax(last_logits, axis=-1).astype(jnp.int32)]
+        pos = plen
+        for _ in range(max_new_tokens - 1):
+            lg, cache = self._step(self.params, cache, out[-1][:, None],
+                                   jnp.int32(pos))
+            out.append(jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32))
+            pos += 1
+        return np.stack([np.asarray(t) for t in out], axis=1)

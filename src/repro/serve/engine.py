@@ -1,78 +1,293 @@
-"""Batched serving engine: prefill + greedy decode over a KV/SSM cache.
+"""Mapping-as-a-service: a batching request server over the unified
+mapping pipeline.
 
-For attention families the prompt is prefETCHED in one forward pass
-(collecting per-layer k/v); SSM/hybrid prompts replay through the
-single-token recurrence inside a lax.fori_loop (state capture during a
-full-sequence SSD pass is an optimisation left to the kernel path).
+The paper's mapper is cheap enough to run at job-launch time for every
+allocation shape it meets — so this module serves mapping decisions as
+REQUESTS instead of one-shot scripts.  A :class:`MappingRequest` (task
+graph + machine/allocation + objective/config) is canonicalised to a
+content-addressed signature (:mod:`repro.core.signature`);
+:class:`MappingService` then
+
+- serves repeat requests from a bounded LRU of mapping results
+  (``warm`` responses — no partitioning, no scoring, no backend
+  compiles);
+- coalesces duplicate in-flight requests: concurrent submissions of the
+  same problem share ONE pipeline pass and receive bit-identical
+  results (``coalesced`` responses);
+- routes misses through the process-wide shared
+  :class:`repro.mapping.MappingPipeline` registry
+  (:func:`repro.mapping.shared_pipeline`), so the evaluator fallback
+  chain and the jax/pallas compile caches (PR 4) are resolved/warmed
+  once per process, not once per request (``cold`` responses).
+
+Response schema (see README "repro.serve"): ``result`` (the
+:class:`repro.core.MappingResult` — treat as read-only, it is shared
+with the cache), ``signature``, ``status`` (cold/warm/coalesced) and
+``latency_s``.
+
+The token-decode model server that used to live here moved to
+:mod:`repro.serve.decode`; ``ServeEngine`` is re-exported below for
+compatibility.
 """
 
 from __future__ import annotations
 
-import functools
+import dataclasses
+import threading
+import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models import (ModelConfig, decode_step, init_cache, prefill)
+from repro.core.signature import array_digest, mapping_signature
+from repro.mapping import PipelineConfig, shared_pipeline
+from repro.serve.cache import LRUCache
 
 
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, *, max_seq: int,
-                 batch: int):
-        self.cfg = cfg
-        self.params = params
-        self.max_seq = max_seq
-        self.batch = batch
-        self._step = jax.jit(functools.partial(decode_step, cfg),
-                             donate_argnums=(1,))
-        self._prefill = jax.jit(functools.partial(prefill, cfg),
-                                static_argnames=("max_seq",))
+def __getattr__(name):
+    # compat: the token-decode ServeEngine moved to repro.serve.decode;
+    # resolve it lazily so the mapping service never pays the jax/model
+    # import (PEP 562)
+    if name == "ServeEngine":
+        from repro.serve.decode import ServeEngine
+        return ServeEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
-    # -- prompt ingestion ---------------------------------------------------
+# Short objective aliases accepted by make_request / the scenario
+# registry ("wh" is the paper's WeightedHops rotation-search objective;
+# "latency" is the TPU mesh builder's lexicographic pair).
+OBJECTIVES = {
+    "wh": "weighted_hops",
+    "latency": ("latency_max", "weighted_hops"),
+}
 
-    def _ingest_attention(self, batch_inputs, prompt_len: int):
-        logits, cache = self._prefill(self.params, batch_inputs,
-                                      max_seq=self.max_seq)
-        return logits[:, -1], cache
 
-    def _ingest_recurrent(self, tokens):
-        cache = init_cache(self.cfg, tokens.shape[0], self.max_seq)
-        logits = None
+@dataclasses.dataclass
+class MappingRequest:
+    """One mapping problem: what to map, onto what, optimising what.
 
-        def body(t, carry):
-            cache, logits = carry
-            lg, cache = decode_step(self.cfg, self.params, cache,
-                                    jax.lax.dynamic_slice_in_dim(
-                                        tokens, t, 1, axis=1),
-                                    t)
-            return cache, lg[:, 0]
+    graph        : :class:`repro.core.TaskGraph`.
+    alloc        : :class:`repro.core.Allocation` (machine + node rows).
+    config       : :class:`repro.mapping.PipelineConfig` — the full
+                   pipeline knob set, including ``objective``.
+    task_coords  : optional task-coordinate override (the TPU mesh
+                   builder's traffic-scaled coordinates).
+    task_weights : optional per-task weights for the partitioner.
 
-        cache, last = jax.lax.fori_loop(
-            0, tokens.shape[1], body,
-            (cache, jnp.zeros((tokens.shape[0], self.cfg.vocab_size),
-                              jnp.dtype(self.cfg.dtype))))
-        return last, cache
+    The request's identity is its CONTENT — two independently-built
+    requests with equal arrays/config share a signature and therefore a
+    cache entry.  The signature is computed once and memoised on the
+    instance (requests are cheap handles; reuse them for hot paths).
+    """
 
-    # -- public API ----------------------------------------------------------
+    graph: object
+    alloc: object
+    config: PipelineConfig = dataclasses.field(
+        default_factory=PipelineConfig)
+    task_coords: np.ndarray | None = None
+    task_weights: np.ndarray | None = None
+    _signature: str | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
-    def generate(self, tokens: np.ndarray, *, max_new_tokens: int,
-                 extras: dict | None = None) -> np.ndarray:
-        """Greedy continuation of ``tokens`` (B, prompt_len)."""
-        cfg = self.cfg
-        tokens = jnp.asarray(tokens, jnp.int32)
-        b, plen = tokens.shape
-        inputs = {"tokens": tokens, **(extras or {})}
-        if cfg.family in ("ssm", "hybrid"):
-            ingest = jax.jit(self._ingest_recurrent)
-            last_logits, cache = ingest(tokens)
+    def signature(self) -> str:
+        if self._signature is None:
+            extra = {}
+            if self.task_coords is not None:
+                extra["task_coords"] = array_digest(self.task_coords)
+            if self.task_weights is not None:
+                extra["task_weights"] = array_digest(self.task_weights)
+            self._signature = mapping_signature(
+                self.graph, self.alloc, self.config, extra or None)
+        return self._signature
+
+
+def make_request(graph, alloc, objective="wh", *, config=None,
+                 task_coords=None, task_weights=None,
+                 **overrides) -> MappingRequest:
+    """Build a :class:`MappingRequest`.
+
+    ``objective`` accepts an alias from :data:`OBJECTIVES`, a metric
+    key, or a tuple of keys (lexicographic).  ``overrides`` are
+    :class:`PipelineConfig` fields (``rotations=8``,
+    ``hierarchy="node"``, ...); pass ``config`` to supply a full config
+    instead (mutually exclusive with ``objective``/``overrides``).
+    """
+    if config is None:
+        config = PipelineConfig(
+            objective=OBJECTIVES.get(objective, objective), **overrides)
+    elif overrides:
+        raise ValueError("pass either config= or config-field overrides,"
+                         " not both")
+    return MappingRequest(graph, alloc, config,
+                          task_coords=task_coords,
+                          task_weights=task_weights)
+
+
+@dataclasses.dataclass
+class MappingResponse:
+    """What the service returns for one request.
+
+    result    : the mapping (shared with the cache — read-only).
+    signature : the request's content signature (the cache key).
+    status    : "cold" (pipeline ran), "warm" (LRU hit) or "coalesced"
+                (shared an in-flight computation or a batch duplicate).
+    latency_s : wall-clock seconds this request spent in the service.
+    """
+
+    result: object
+    signature: str
+    status: str
+    latency_s: float
+
+
+class _InFlight:
+    """One in-progress computation; duplicate requests wait on it."""
+
+    __slots__ = ("event", "result", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.result = None
+        self.error = None
+
+
+class MappingService:
+    """The request server: canonicalise, coalesce, cache, compute.
+
+    capacity : bound of the result LRU (entries, not bytes — a result
+               is one int array per request).
+    """
+
+    def __init__(self, capacity: int = 256):
+        self.results = LRUCache(capacity)
+        self._inflight: dict[str, _InFlight] = {}
+        self._lock = threading.Lock()
+        self._counts = {"cold": 0, "warm": 0, "coalesced": 0}
+
+    # -- the miss path ---------------------------------------------------
+
+    def _compute(self, request: MappingRequest):
+        """Run the pipeline for a cache miss (test seam: override to
+        instrument/block the cold path)."""
+        pipe = shared_pipeline(request.config)
+        return pipe.map(request.graph, request.alloc,
+                        task_coords=request.task_coords,
+                        task_weights=request.task_weights)
+
+    # -- public API ------------------------------------------------------
+
+    def map(self, request: MappingRequest) -> MappingResponse:
+        """Serve one request (thread-safe).
+
+        Warm path: signature + one LRU lookup.  Concurrent duplicates
+        of an uncached signature share one `_compute` pass; exactly one
+        caller is the owner, the rest block until it publishes.
+        """
+        t0 = time.perf_counter()
+        sig = request.signature()
+        result = self.results.get(sig)
+        if result is not None:
+            return self._respond(result, sig, "warm", t0)
+
+        with self._lock:
+            # recheck under the lock: the owner may have published
+            # between the miss above and here (uncounted — one logical
+            # lookup must not book two misses)
+            result = self.results.get(sig, count=False)
+            if result is not None:
+                return self._respond(result, sig, "warm", t0)
+            entry = self._inflight.get(sig)
+            owner = entry is None
+            if owner:
+                entry = self._inflight[sig] = _InFlight()
+
+        if not owner:
+            entry.event.wait()
+            if entry.error is not None:
+                raise entry.error
+            if entry.result is None:
+                # the owner died without publishing (e.g. a
+                # KeyboardInterrupt that unwound past its except)
+                raise RuntimeError(
+                    "in-flight mapping computation was aborted")
+            return self._respond(entry.result, sig, "coalesced", t0)
+
+        try:
+            entry.result = self._compute(request)
+            self.results.put(sig, entry.result)
+        except BaseException as e:  # record aborts for waiters too
+            entry.error = e
+            raise
+        finally:
+            with self._lock:
+                del self._inflight[sig]
+            entry.event.set()
+        return self._respond(entry.result, sig, "cold", t0)
+
+    def map_many(self, requests, max_workers: int = 0) -> list:
+        """Serve a batch, coalescing duplicates WITHIN the batch.
+
+        Unique signatures are computed once (in submission order, or
+        concurrently when ``max_workers > 1``); every later duplicate
+        receives the first occurrence's result as a ``coalesced``
+        response.  Responses line up with ``requests``.
+        """
+        first: dict[str, MappingRequest] = {}
+        for req in requests:
+            first.setdefault(req.signature(), req)
+        unique = list(first.values())
+        if max_workers > 1 and len(unique) > 1:
+            import concurrent.futures as cf
+            with cf.ThreadPoolExecutor(max_workers=max_workers) as pool:
+                primary = list(pool.map(self.map, unique))
         else:
-            last_logits, cache = self._ingest_attention(inputs, plen)
-        out = [jnp.argmax(last_logits, axis=-1).astype(jnp.int32)]
-        pos = plen
-        for _ in range(max_new_tokens - 1):
-            lg, cache = self._step(self.params, cache, out[-1][:, None],
-                                   jnp.int32(pos))
-            out.append(jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32))
-            pos += 1
-        return np.stack([np.asarray(t) for t in out], axis=1)
+            primary = [self.map(r) for r in unique]
+        by_sig = {r.signature: r for r in primary}
+        out = []
+        seen: set[str] = set()
+        for req in requests:
+            sig = req.signature()
+            resp = by_sig[sig]
+            if sig in seen:
+                with self._lock:
+                    self._counts["coalesced"] += 1
+                resp = dataclasses.replace(resp, status="coalesced",
+                                           latency_s=0.0)
+            seen.add(sig)
+            out.append(resp)
+        return out
+
+    def stats(self) -> dict:
+        """Cumulative service counters + the result-cache stats."""
+        with self._lock:
+            counts = dict(self._counts)
+        return {**counts,
+                "requests": sum(counts.values()),
+                "inflight": len(self._inflight),
+                "cache": self.results.stats()}
+
+    def _respond(self, result, sig, status, t0) -> MappingResponse:
+        with self._lock:
+            self._counts[status] += 1
+        return MappingResponse(result, sig, status,
+                               time.perf_counter() - t0)
+
+
+# Process-wide convenience instance for ad-hoc callers that want one
+# shared cache without owning a service object — e.g. pass it to
+# ``topology_mesh(..., service=default_service())`` so REPEAT mesh
+# builds in one process hit the same cache.
+_DEFAULT: MappingService | None = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_service(capacity: int = 256) -> MappingService:
+    """The lazily-created process-wide :class:`MappingService`.
+
+    ``capacity`` only applies to the first call (it sizes the
+    singleton's LRU); later calls return the existing instance.
+    """
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = MappingService(capacity)
+        return _DEFAULT

@@ -74,12 +74,6 @@ def train(cfg: ModelConfig, opt_cfg: OptConfig, job: JobConfig, mesh,
         if job.ckpt_dir:
             last = ckpt.latest_step(job.ckpt_dir)
             if last is not None:
-                like = {
-                    "params": tree_init(params_spec(cfg),
-                                        jax.random.PRNGKey(job.seed),
-                                        cfg.dtype),
-                    "opt": None,
-                }
                 # build fresh then overwrite (simple; small-model driver)
                 params = tree_init(params_spec(cfg),
                                    jax.random.PRNGKey(job.seed), cfg.dtype)

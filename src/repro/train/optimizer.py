@@ -9,7 +9,6 @@ fall out of the rules engine for free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +42,10 @@ def schedule_lr(cfg: OptConfig, step):
 
 def init_state(cfg: OptConfig, params) -> dict:
     dt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     state = {
         "step": jnp.zeros((), jnp.int32),
         "m": jax.tree.map(zeros, params),
@@ -57,7 +59,10 @@ def init_state(cfg: OptConfig, params) -> dict:
 
 def abstract_state(cfg: OptConfig, abstract_params) -> dict:
     dt = jnp.dtype(cfg.moment_dtype)
-    mk = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+
+    def mk(p):
+        return jax.ShapeDtypeStruct(p.shape, dt)
+
     state = {
         "step": jax.ShapeDtypeStruct((), jnp.int32),
         "m": jax.tree.map(mk, abstract_params),
@@ -122,8 +127,10 @@ def apply_updates(cfg: OptConfig, params, grads, state):
                 m32.astype(mdt), v32.astype(mdt))
 
     trips = jax.tree.map(upd, params, grads, state["m"], state["v"])
-    first = lambda t: t[0]
-    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+
+    def is3(x):
+        return isinstance(x, tuple) and len(x) == 3
+
     new_params = jax.tree.map(lambda t: t[0], trips, is_leaf=is3)
     new_m = jax.tree.map(lambda t: t[1], trips, is_leaf=is3)
     new_v = jax.tree.map(lambda t: t[2], trips, is_leaf=is3)

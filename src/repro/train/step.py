@@ -7,14 +7,12 @@ optional gradient accumulation (microbatching) via lax.scan.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from repro.models import (ModelConfig, cache_axes, cache_spec, decode_step,
-                          loss_fn, params_spec, tree_abstract, tree_axes)
+from repro.models import (ModelConfig, decode_step, loss_fn, params_spec,
+                          tree_abstract, tree_axes)
 from repro.sharding.rules import DEFAULT_RULES, spec_for_axes, tree_shardings
 
 from .optimizer import OptConfig, abstract_state, apply_updates
@@ -133,7 +131,6 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, *, rules=None,
     if not jit:
         return fn
     param_sh, ab, axes = model_shardings(cfg, mesh, rules)
-    cax = cache_axes(cfg)
     return jax.jit(
         fn,
         in_shardings=(param_sh, None, None, None),

@@ -1,8 +1,5 @@
 """Mapping-aware collective model tests (meshmap/collective_model)."""
 
-import numpy as np
-import pytest
-
 from repro.core import (Allocation, identity_mapping, logical_mesh_graph,
                         make_machine, sfc_allocation, tpu_v5e_pod)
 from repro.meshmap.collective_model import (collective_term,

@@ -1,0 +1,129 @@
+"""Benchmark-regression gate tests (ISSUE 5): the committed baseline
+self-compares clean, and a deliberately perturbed baseline FAILS the
+gate (the negative test the acceptance criteria require)."""
+
+import copy
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+_COMPARE = os.path.join(_ROOT, "benchmarks", "compare.py")
+_BASELINE = os.path.join(_ROOT, "benchmarks", "baseline.json")
+
+_spec = importlib.util.spec_from_file_location("bench_compare", _COMPARE)
+compare_mod = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(compare_mod)
+
+
+@pytest.fixture()
+def baseline():
+    with open(_BASELINE) as f:
+        return json.load(f)
+
+
+def test_committed_baseline_self_compares_clean(baseline):
+    assert compare_mod.compare(baseline, baseline) == []
+
+
+def test_perturbed_exact_oracle_fails(baseline):
+    bad = copy.deepcopy(baseline)
+    bad["benchmarks"]["candidates"]["derived"]["winner_identical"] = 0.0
+    problems = compare_mod.compare(baseline, bad)
+    assert any("winner_identical" in p for p in problems)
+
+
+def test_ratio_regression_beyond_tolerance_fails(baseline):
+    bad = copy.deepcopy(baseline)
+    # the baseline claims a 4x higher speedup than the current run has
+    bad["benchmarks"]["hier"]["derived"]["flat_vs_hier"] *= 4.0
+    problems = compare_mod.compare(baseline, bad)
+    assert any("flat_vs_hier" in p for p in problems)
+
+
+def test_ratio_noise_within_tolerance_passes(baseline):
+    noisy = copy.deepcopy(baseline)
+    # 20% slower than baseline is runner noise, not a regression
+    noisy["benchmarks"]["hier"]["derived"]["flat_vs_hier"] *= 0.8
+    assert compare_mod.compare(noisy, baseline) == []
+
+
+def test_quality_metric_drift_fails(baseline):
+    bad = copy.deepcopy(baseline)
+    bad["benchmarks"]["hier"]["derived"]["wh_ratio"] *= 1.5
+    problems = compare_mod.compare(bad, baseline)
+    assert any("wh_ratio" in p for p in problems)
+
+
+def test_missing_benchmark_fails(baseline):
+    partial = copy.deepcopy(baseline)
+    del partial["benchmarks"]["serve"]
+    problems = compare_mod.compare(partial, baseline)
+    assert any("serve" in p and "missing" in p for p in problems)
+
+
+def test_failed_current_record_fails(baseline):
+    bad = copy.deepcopy(baseline)
+    bad["benchmarks"]["serve"]["ok"] = False
+    problems = compare_mod.compare(bad, baseline)
+    assert any("serve" in p and "failed" in p for p in problems)
+
+
+def test_mode_mismatch_fails(baseline):
+    smoke = copy.deepcopy(baseline)
+    smoke["smoke"] = True
+    problems = compare_mod.compare(smoke, baseline)
+    assert problems and "mode" in problems[0]
+
+
+def test_make_baseline_strips_timing_fields():
+    current = {"benchmarks": [
+        {"name": "x", "ok": True, "us_per_call": 123.0,
+         "derived": {"speedup": 5.0, "loop_us": 999.0, "t_cold_s": 1.0}},
+    ], "full": False, "smoke": False}
+    base = compare_mod.make_baseline(current)
+    derived = base["benchmarks"]["x"]["derived"]
+    assert derived == {"speedup": 5.0}
+
+
+def test_cli_positive_and_negative(tmp_path, baseline):
+    """The CLI exits 0 against the committed baseline and 1 against a
+    deliberately perturbed one (the ISSUE-5 negative test)."""
+    current = tmp_path / "current.json"
+    current.write_text(json.dumps(baseline))
+    ok = subprocess.run(
+        [sys.executable, _COMPARE, str(current),
+         "--baseline", _BASELINE],
+        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+
+    bad = copy.deepcopy(baseline)
+    bad["benchmarks"]["serve"]["derived"]["coalesced_identical"] = 0.0
+    bad["benchmarks"]["partition"]["derived"]["best"] *= 10.0
+    perturbed = tmp_path / "perturbed-baseline.json"
+    perturbed.write_text(json.dumps(bad))
+    fail = subprocess.run(
+        [sys.executable, _COMPARE, str(current),
+         "--baseline", str(perturbed)],
+        capture_output=True, text=True)
+    assert fail.returncode == 1, fail.stdout + fail.stderr
+    assert "coalesced_identical" in fail.stdout
+    assert "best" in fail.stdout
+
+
+def test_write_baseline_cli_roundtrip(tmp_path, baseline):
+    current = tmp_path / "current.json"
+    current.write_text(json.dumps(baseline))
+    out = tmp_path / "new-baseline.json"
+    w = subprocess.run(
+        [sys.executable, _COMPARE, str(current),
+         "--write-baseline", str(out)],
+        capture_output=True, text=True)
+    assert w.returncode == 0 and out.exists()
+    with open(out) as f:
+        rebuilt = json.load(f)
+    assert compare_mod.compare(baseline, rebuilt) == []

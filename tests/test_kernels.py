@@ -142,8 +142,8 @@ def test_ssd_matches_oracle(dtype, b, l, h, p, n, chunk):
        st.integers(0, 20))
 @settings(max_examples=10, deadline=None)
 def test_ssd_property(b, nchunk, h, seed):
-    l = nchunk * 16
-    x, dt, A, B, C = _mk_ssd(jax.random.PRNGKey(seed), b, l, h, 8, 8)
+    slen = nchunk * 16
+    x, dt, A, B, C = _mk_ssd(jax.random.PRNGKey(seed), b, slen, h, 8, 8)
     y = ssd(x, dt, A, B, C, chunk=16, interpret=True)
     ref = _oracle(x, dt, A, B, C)
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref),

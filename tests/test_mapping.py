@@ -11,7 +11,7 @@ from repro.core import (Mapper, MapperConfig, block_allocation,
                         closest_subset, cube_sphere_graph, evaluate,
                         geometric_map, identity_mapping, make_machine,
                         sfc_allocation, shift_torus, stencil_graph,
-                        tpu_v5e_multipod, tpu_v5e_pod)
+                        tpu_v5e_multipod)
 from repro.core.transforms import box_lift, scale_by_bandwidth
 
 

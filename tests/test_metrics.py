@@ -8,7 +8,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.machine import make_machine, gemini_xk7
-from repro.core.metrics import (Traffic, average_hops, data_metric,
+from repro.core.metrics import (average_hops, data_metric,
                                 latency_metric, pairwise_hops,
                                 per_dim_stats, route_traffic)
 

@@ -1,0 +1,338 @@
+"""Serve-layer tests (ISSUE 5): content-addressed signatures, LRU
+hit/miss/eviction, request coalescing (solo bit-identity), scenario-
+registry determinism, and the end-to-end warm path (zero new backend
+compiles via PR 4's compile-cache counters)."""
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Allocation, config_signature, machine_signature,
+                        make_machine, mapping_signature, stencil_graph,
+                        taskgraph_signature)
+from repro.mapping import PipelineConfig, shared_pipeline
+from repro.serve import (LRUCache, MappingService, all_scenarios,
+                         get_scenario, make_request, scenario_names)
+from repro.serve.scenarios import (ALLOCATIONS, HIERARCHIES,
+                                   OBJECTIVE_KEYS, WORKLOADS)
+
+SCALE = 256  # tiny but structurally real problems
+
+BASE = "minighost-xk7_sparse-flat-wh"
+
+
+def _req(name=BASE, seed=0, scale=SCALE):
+    return get_scenario(name, scale=scale, seed=seed).request()
+
+
+# ---------------------------------------------------------------------------
+# Signatures
+# ---------------------------------------------------------------------------
+
+def test_signature_is_content_addressed():
+    a, b = _req(), _req()
+    assert a is not b and a.graph is not b.graph
+    assert a.signature() == b.signature()
+
+
+def test_signature_sensitivity():
+    a = _req()
+    g = a.graph
+    w2 = g.weights.copy()
+    g2 = dataclasses.replace(g, weights=w2)
+    assert taskgraph_signature(g) == taskgraph_signature(g2)
+    w2[3] += 1.0
+    assert taskgraph_signature(g) != taskgraph_signature(g2)
+
+    cfg = PipelineConfig(rotations=4)
+    cfg2 = PipelineConfig(rotations=8)
+    assert config_signature(cfg) != config_signature(cfg2)
+    assert mapping_signature(g, a.alloc, cfg) != \
+        mapping_signature(g, a.alloc, cfg2)
+
+
+def test_machine_name_is_a_label_not_identity():
+    m = make_machine((4, 4), wrap=True, name="one")
+    m2 = dataclasses.replace(m, name="two")
+    assert machine_signature(m) == machine_signature(m2)
+    m3 = make_machine((4, 4), wrap=False, name="one")
+    assert machine_signature(m) != machine_signature(m3)
+
+
+def test_taskgraph_meta_excluded_from_signature():
+    g = stencil_graph((4, 4))
+    g2 = dataclasses.replace(g, meta={"totally": "different"})
+    assert taskgraph_signature(g) == taskgraph_signature(g2)
+
+
+# ---------------------------------------------------------------------------
+# LRU cache
+# ---------------------------------------------------------------------------
+
+def test_lru_hit_miss_eviction():
+    c = LRUCache(capacity=2)
+    assert c.get("a") is None
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1  # refreshes "a": "b" is now LRU
+    c.put("x", 3)           # evicts "b"
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("x") == 3
+    st = c.stats()
+    assert st["evictions"] == 1 and st["size"] == 2
+    assert st["hits"] == 3 and st["misses"] == 2
+
+
+def test_lru_put_refreshes_existing():
+    c = LRUCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    c.put("a", 10)  # refresh, not insert: no eviction
+    c.put("x", 3)   # evicts "b" (LRU), not "a"
+    assert c.get("a") == 10 and c.get("b") is None
+    assert c.stats()["evictions"] == 1
+
+
+def test_lru_rejects_zero_capacity():
+    with pytest.raises(ValueError):
+        LRUCache(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Service: warm/cold, eviction, coalescing
+# ---------------------------------------------------------------------------
+
+def test_warm_hit_is_bit_identical():
+    svc = MappingService(capacity=8)
+    cold = svc.map(_req())
+    warm = svc.map(_req())  # fresh objects, same content
+    assert cold.status == "cold" and warm.status == "warm"
+    assert warm.signature == cold.signature
+    assert np.array_equal(cold.result.task_to_proc,
+                          warm.result.task_to_proc)
+    st = svc.stats()
+    assert st["cold"] == 1 and st["warm"] == 1
+    assert st["cache"]["hits"] == 1
+
+
+def test_eviction_forces_recompute():
+    svc = MappingService(capacity=1)
+    r1 = _req("minighost-xk7_sparse-flat-wh")
+    r2 = _req("minighost-tpu_mesh-flat-wh")
+    assert svc.map(r1).status == "cold"
+    assert svc.map(r2).status == "cold"   # evicts r1
+    assert svc.map(_req("minighost-xk7_sparse-flat-wh")).status == "cold"
+    assert svc.results.stats()["evictions"] == 2
+    assert svc.stats()["warm"] == 0
+
+
+def test_map_many_coalesces_batch_duplicates():
+    svc = MappingService(capacity=8)
+    reqs = [_req() for _ in range(5)] + [_req("homme-bgq_block-flat-wh")]
+    responses = svc.map_many(reqs)
+    statuses = [r.status for r in responses]
+    assert statuses.count("cold") == 2
+    assert statuses.count("coalesced") == 4
+    # coalesced results are bit-identical to a solo request
+    solo = MappingService(capacity=8).map(_req())
+    for r in responses[:5]:
+        assert np.array_equal(r.result.task_to_proc,
+                              solo.result.task_to_proc)
+
+
+def test_concurrent_requests_share_one_computation():
+    gate = threading.Event()
+    computes = []
+
+    class Blocking(MappingService):
+        def _compute(self, request):
+            computes.append(request.signature())
+            assert gate.wait(timeout=30)
+            return super()._compute(request)
+
+    svc = Blocking(capacity=8)
+    responses = [None] * 4
+
+    def worker(i):
+        responses[i] = svc.map(_req())
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    # wait until the owner is inside _compute, then release everyone
+    for _ in range(1000):
+        if computes:
+            break
+        threading.Event().wait(0.01)
+    gate.set()
+    for t in threads:
+        t.join(timeout=60)
+    assert len(computes) == 1, "duplicate in-flight requests recomputed"
+    statuses = sorted(r.status for r in responses)
+    assert statuses == ["coalesced", "coalesced", "coalesced", "cold"]
+    ref = responses[0].result.task_to_proc
+    for r in responses[1:]:
+        assert np.array_equal(r.result.task_to_proc, ref)
+
+
+def test_compute_error_propagates_and_clears_inflight():
+    class Broken(MappingService):
+        def _compute(self, request):
+            raise RuntimeError("boom")
+
+    svc = Broken(capacity=8)
+    with pytest.raises(RuntimeError):
+        svc.map(_req())
+    assert svc.stats()["inflight"] == 0
+    # the failure is not cached: nothing poisoned for later requests
+    assert svc.results.stats()["size"] == 0
+
+
+def test_make_request_objective_aliases():
+    g = stencil_graph((4, 4))
+    alloc = Allocation(make_machine((4, 4), wrap=True),
+                       np.stack(np.meshgrid(range(4), range(4),
+                                            indexing="ij"),
+                                axis=-1).reshape(-1, 2))
+    r = make_request(g, alloc, "latency", rotations=2)
+    assert r.config.objective == ("latency_max", "weighted_hops")
+    r2 = make_request(g, alloc, "wh")
+    assert r2.config.objective == "weighted_hops"
+    with pytest.raises(ValueError):
+        make_request(g, alloc, config=PipelineConfig(), rotations=2)
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry
+# ---------------------------------------------------------------------------
+
+def test_registry_is_the_full_cross_product():
+    scens = all_scenarios(scale=SCALE)
+    expect = (len(WORKLOADS) * len(ALLOCATIONS) * len(HIERARCHIES)
+              * len(OBJECTIVE_KEYS))
+    assert len(scens) == expect
+    names = [s.name for s in scens]
+    assert len(set(names)) == expect
+    assert scenario_names() == names
+
+
+def test_get_scenario_roundtrip_and_validation():
+    s = get_scenario(BASE, scale=SCALE, seed=3)
+    assert s.name == BASE and s.seed == 3
+    with pytest.raises(ValueError):
+        get_scenario("minighost-xk7_sparse-flat")
+    with pytest.raises(ValueError):
+        get_scenario("nope-xk7_sparse-flat-wh")
+
+
+def test_scenario_determinism_same_seed_same_graph():
+    for name in ("random-tpu_mesh-flat-wh", "minighost-fat_tree-node-wh",
+                 "homme-xk7_sparse-flat-latency"):
+        a = get_scenario(name, scale=SCALE, seed=1).request()
+        b = get_scenario(name, scale=SCALE, seed=1).request()
+        assert np.array_equal(a.graph.coords, b.graph.coords)
+        assert np.array_equal(a.graph.edges, b.graph.edges)
+        assert np.array_equal(a.graph.weights, b.graph.weights)
+        assert np.array_equal(a.alloc.coords, b.alloc.coords)
+        assert a.signature() == b.signature()
+    # scenarios with a stochastic component (random graphs, fragmented
+    # sparse allocations) must CHANGE with the seed; fully structured
+    # ones (stencil on a block prefix) are legitimately seed-free
+    for name in ("random-tpu_mesh-flat-wh",
+                 "homme-xk7_sparse-flat-latency"):
+        a = get_scenario(name, scale=SCALE, seed=1).request()
+        c = get_scenario(name, scale=SCALE, seed=2).request()
+        assert a.signature() != c.signature(), name
+
+
+def test_random_workload_seed_changes_graph():
+    a = get_scenario("random-tpu_mesh-flat-wh", scale=SCALE,
+                     seed=1).request()
+    b = get_scenario("random-tpu_mesh-flat-wh", scale=SCALE,
+                     seed=2).request()
+    assert not np.array_equal(a.graph.coords, b.graph.coords)
+
+
+def test_every_scenario_serves_a_valid_mapping():
+    svc = MappingService(capacity=64)
+    for s in all_scenarios(scale=SCALE):
+        req = s.request()
+        resp = svc.map(req)
+        assert resp.status == "cold", s.name
+        t2p = resp.result.task_to_proc
+        assert len(t2p) == req.graph.n, s.name
+        assert t2p.min() >= 0 and t2p.max() < req.alloc.n, s.name
+        if req.graph.n == req.alloc.n:
+            # 1:1 scenarios must be bijections
+            assert len(np.unique(t2p)) == req.graph.n, s.name
+
+
+# ---------------------------------------------------------------------------
+# Warm path: shared pipelines, zero new backend compiles
+# ---------------------------------------------------------------------------
+
+def test_shared_pipeline_is_memoised_by_config_content():
+    a = shared_pipeline(PipelineConfig(rotations=4))
+    b = shared_pipeline(PipelineConfig(rotations=4))
+    c = shared_pipeline(PipelineConfig(rotations=8))
+    assert a is b and a is not c
+
+
+def test_warm_path_zero_new_backend_compiles():
+    """End-to-end: a repeat request must not trigger ANY new jax scorer
+    compile — it never reaches the scoring engine at all (PR 4's
+    compile-cache counters are the witness)."""
+    metrics_jax = pytest.importorskip("repro.core.metrics_jax")
+    svc = MappingService(capacity=8)
+    scen = get_scenario("minighost-tpu_mesh-flat-latency", scale=SCALE)
+
+    def jax_request():
+        req = scen.request()
+        return make_request(req.graph, req.alloc, "latency",
+                            rotations=4, score_backend="jax")
+
+    cold = svc.map(jax_request())
+    assert cold.status == "cold"
+    before = metrics_jax.scorer_cache_stats()
+    warm = svc.map(jax_request())  # fresh objects, same content
+    after = metrics_jax.scorer_cache_stats()
+    assert warm.status == "warm"
+    assert after["misses"] == before["misses"], \
+        "warm-path request compiled a new backend scorer"
+    assert after["hits"] == before["hits"], \
+        "warm-path request re-entered the scoring engine"
+    assert np.array_equal(cold.result.task_to_proc,
+                          warm.result.task_to_proc)
+
+
+def test_default_service_is_a_process_singleton():
+    from repro.serve import default_service
+    a = default_service()
+    b = default_service(capacity=8)  # capacity only sizes the first call
+    assert a is b
+    resp = a.map(_req("homme-tpu_mesh-flat-wh"))
+    assert resp.status == "cold"
+    assert a.map(_req("homme-tpu_mesh-flat-wh")).status == "warm"
+
+
+def test_select_mapping_through_the_service_cache():
+    from repro.core import logical_mesh_graph, tpu_v5e_pod
+    from repro.meshmap.device_mesh import select_mapping
+
+    machine = tpu_v5e_pod(side=4)
+    graph = logical_mesh_graph((4, 4), (8.0, 64.0), ("data", "model"))
+    coords = machine.all_coords()
+    alloc = Allocation(machine, coords)
+    svc = MappingService(capacity=32)
+    best1, m1, _ = select_mapping(graph, alloc, [8.0, 64.0],
+                                  rotations=4, service=svc)
+    warm_before = svc.stats()["warm"]
+    best2, m2, _ = select_mapping(graph, alloc, [8.0, 64.0],
+                                  rotations=4, service=svc)
+    assert svc.stats()["warm"] > warm_before, \
+        "repeat mesh build did not hit the service cache"
+    assert np.array_equal(best1.task_to_proc, best2.task_to_proc)
+    assert m1 == m2

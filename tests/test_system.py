@@ -7,7 +7,6 @@ lowering machinery produces coherent artifacts for a small config.
 """
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import Mesh
 
 from repro.models import ModelConfig
@@ -19,7 +18,7 @@ from repro.train import checkpoint as ckpt
 from repro.train.data import Prefetcher, SyntheticLM
 from repro.train.driver import (JobConfig, StragglerMonitor, train,
                                 train_with_restarts)
-from repro.train.optimizer import (OptConfig, apply_updates, global_norm,
+from repro.train.optimizer import (OptConfig, apply_updates,
                                    init_state, schedule_lr)
 
 TINY = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
