@@ -45,6 +45,8 @@ POLICY = {
     "candidates": {"exact": ["winner_identical", "winner"],
                    "min_ratio": {"speedup": 0.5}},
     "mapscore": {"exact": ["winner_identical"]},
+    "end2end": {"exact": ["winner_identical"],
+                "min_ratio": {"speedup": 0.5}},
     "serve": {"exact": ["coalesced_identical", "warm_identical"],
               "min_ratio": {"warm_speedup": 0.5}},
     "hier": {"exact": ["refine_monotone"],

@@ -102,11 +102,19 @@ def run(scale: int = 4096, seed: int = 0, dups: int = 8, *,
         "coalesced result differs from a solo request"
 
     speedup = t_cold / max(t_warm, 1e-9)
+    # per-stage cold-path attribution: the pipeline records wall-clock
+    # per stage (partition / score / refine, or fused when the whole
+    # chain ran as one device program) in MappingResult.stats
+    stage = {}
+    for c in cold:
+        for k, v in c.result.stats.get("timings", {}).items():
+            stage[k] = stage.get(k, 0.0) + float(v)
     out = {
         "scale": scale, "nscenarios": len(reqs), "dups": dups,
         "t_cold_s": t_cold, "t_warm_s": t_warm, "t_coalesced_s": t_co,
         "warm_speedup": speedup,
         "warm_us_per_req": t_warm / len(reqs) * 1e6,
+        "stage_us": {k: v * 1e6 for k, v in sorted(stage.items())},
         "stats": svc.stats(),
     }
     if not quiet:
@@ -124,6 +132,9 @@ def run(scale: int = 4096, seed: int = 0, dups: int = 8, *,
 
 def headline(results: dict) -> str:
     st = results["stats"]
+    stages = "".join(
+        f";stage_{k[:-2] if k.endswith('_s') else k}_us={v:.0f}"
+        for k, v in results.get("stage_us", {}).items())
     return (f"scale={results['scale']};"
             f"nscenarios={results['nscenarios']};"
             f"cold_us={results['t_cold_s']*1e6:.0f};"
@@ -133,7 +144,7 @@ def headline(results: dict) -> str:
             f"coalesced_identical=1;warm_identical=1;"
             f"cache_hits={st['cache']['hits']};"
             f"cold={st['cold']};warm={st['warm']};"
-            f"coalesced={st['coalesced']}")
+            f"coalesced={st['coalesced']}" + stages)
 
 
 def main():

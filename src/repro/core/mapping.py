@@ -114,6 +114,8 @@ class MapperConfig:
     uneven_prime   : Z2_2 — largest-prime-divisor uneven bisection.
     longest_dim    : cut the longest dimension (False = strict alternation).
     backend        : partitioner engine ("vectorized" or "recursive").
+    partition_backend : partition device backend ("numpy" or "jax";
+                     silent jax -> numpy fallback, resolved once).
     sweep          : rotation-sweep mode ("batched" = ~2 engine passes
                      for the whole sweep; "loop" = per-candidate oracle).
     score_backend  : candidate scoring engine ("numpy", "jax" or
@@ -136,6 +138,7 @@ class MapperConfig:
     uneven_prime: bool = False
     longest_dim: bool = True
     backend: str = "vectorized"
+    partition_backend: str = "numpy"
     sweep: str = "batched"
     score_backend: str = "numpy"
     hierarchy: str = "flat"

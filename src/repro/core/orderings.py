@@ -40,7 +40,47 @@ from __future__ import annotations
 import numpy as np
 
 SFC_KINDS = ("Z", "Gray", "FZ", "FZlow", "H")
-BACKENDS = ("vectorized", "recursive")
+BACKENDS = ("vectorized", "recursive", "jax")
+
+# Partitioner device backends (the pipeline-level knob): "jax" runs the
+# level-synchronous sweep on accelerator (:mod:`repro.core.partition_jax`)
+# and falls back silently to "numpy" (the vectorized engine) when the
+# jax stack is unavailable — same resolved-once discipline as the
+# score-backend chain in :mod:`repro.core.metrics`.
+PARTITION_BACKENDS = ("numpy", "jax")
+_PARTITION_CHAIN = {"numpy": ("numpy",), "jax": ("jax", "numpy")}
+
+# memoised import result: False = untried, None = unavailable,
+# module object = ready
+_JAX_PART = False
+
+
+def _jax_partition_module():
+    global _JAX_PART
+    if _JAX_PART is False:
+        try:
+            from . import partition_jax
+            _JAX_PART = partition_jax
+        except Exception:  # pragma: no cover - container always has jax
+            _JAX_PART = None
+    return _JAX_PART
+
+
+def resolve_partition_backend(backend: str) -> str:
+    """Resolve a partition-backend request down its fallback chain.
+
+    Returns the backend that will actually run ("jax" only when the
+    device engine imports cleanly).  Callers resolve ONCE per pipeline
+    (mirrors ``metrics.get_evaluator``) so the import cost and the
+    fallback decision are not paid per request.
+    """
+    if backend not in PARTITION_BACKENDS:
+        raise ValueError(f"unknown partition backend {backend!r}; "
+                         f"options: {PARTITION_BACKENDS}")
+    for name in _PARTITION_CHAIN[backend]:
+        if name == "numpy" or _jax_partition_module() is not None:
+            return name
+    return "numpy"  # pragma: no cover - chain always ends in numpy
 
 
 # ---------------------------------------------------------------------------
@@ -90,9 +130,11 @@ def order_points(
         level (the paper's earlier [21] behaviour).
     uneven_prime : Z2_2 — split ``nparts`` by its largest prime divisor
         (3/5 vs 2/5 for p=5) instead of requiring powers of two.
-    backend : ``"vectorized"`` (level-synchronous engine, default) or
-        ``"recursive"`` (the original reference recursion).  Both return
-        bit-identical part numbers.
+    backend : ``"vectorized"`` (level-synchronous engine, default),
+        ``"recursive"`` (the original reference recursion) or ``"jax"``
+        (the device engine of :mod:`repro.core.partition_jax`, falling
+        back silently to the vectorized engine when jax is missing).
+        All return bit-identical part numbers.
 
     Returns
     -------
@@ -109,6 +151,13 @@ def order_points(
         return order_points_recursive(
             coords, nparts, sfc, weights=weights, dim_order=dim_order,
             longest_dim=longest_dim, uneven_prime=uneven_prime)
+    if backend == "jax":
+        mod = _jax_partition_module()
+        if mod is not None:
+            return mod.order_points_jax(
+                coords, nparts, sfc, weights=weights, dim_order=dim_order,
+                longest_dim=longest_dim, uneven_prime=uneven_prime)
+        # silent fallback: the vectorized engine is bit-identical
     from .partition import vectorized_order
     return vectorized_order(
         coords, nparts, sfc, weights=weights, dim_order=dim_order,
@@ -149,8 +198,9 @@ def order_points_batched(
         cut-dimension priority permutation (the rotation itself).
     weights, longest_dim, uneven_prime : as in ``order_points``.
     backend : ``"vectorized"`` runs the single batched engine pass;
-        ``"recursive"`` loops the reference recursion per row (the
-        cross-check oracle — slow, kept for equivalence tests).
+        ``"jax"`` the on-device batched sweep (silent fallback to
+        vectorized); ``"recursive"`` loops the reference recursion per
+        row (the cross-check oracle — slow, kept for equivalence tests).
 
     Returns
     -------
@@ -175,6 +225,14 @@ def order_points_batched(
                 coords, nparts, sfc, weights=weights, dim_order=do,
                 longest_dim=longest_dim, uneven_prime=uneven_prime)
             for do in dim_orders])
+    if backend == "jax":
+        mod = _jax_partition_module()
+        if mod is not None:
+            return mod.order_points_batched_jax(
+                coords, nparts, sfc, dim_orders=dim_orders,
+                weights=weights, longest_dim=longest_dim,
+                uneven_prime=uneven_prime)
+        # silent fallback: the vectorized engine is bit-identical
     from .partition import vectorized_order_batched
     return vectorized_order_batched(
         coords, nparts, sfc, dim_orders=dim_orders, weights=weights,

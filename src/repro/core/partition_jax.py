@@ -1,0 +1,352 @@
+"""JAX backend for the level-synchronous Multi-Jagged partitioner.
+
+Implements the ``vectorized_order`` / ``vectorized_order_batched``
+contract on device: the recursion-level loop of paper Algorithm 2 runs
+as a ``lax.while_loop`` over fixed-shape state, with
+
+- the per-level *segmented stable partition* expressed as one
+  ``lax.sort`` over composite ``(segment, coordinate)`` keys,
+- segment extents (longest-dimension selection) via
+  ``jax.ops.segment_max/min`` keyed by segment start,
+- cut placement via per-position rank comparisons (unit weights) or a
+  sequential per-segment weight prefix scan (``lax.scan``), and
+- the SFC coordinate flips as masked negations.
+
+The representation is *positional*: instead of a growing segment table,
+every one of the ``nb_b * npts_b`` padded point slots carries its
+segment's ``(start, size, nparts)`` — constant within a segment, so the
+within-segment stable sorts never have to move the table at all and the
+whole state is fixed-shape int32/float64 arrays (what ``while_loop``
+requires).  Candidate ``b`` of a batched sweep owns slot block
+``[b*npts_b, (b+1)*npts_b)``; padding tails are closed single-part
+segments that the sweep never activates, so bucketing changes no result
+bit.
+
+Bit-identity with the numpy engines (the ``np.lexsort`` tie order of
+``partition._exact_order`` is the oracle) requires three deliberate
+choices, each load-bearing:
+
+- ``jax_enable_x64``: every cut target (``size * npl/np``) and weight
+  prefix sum in the oracle is float64; f32 rounds cuts differently.
+- ``+ 0.0`` key canonicalisation before ``lax.sort``: XLA's total-order
+  float comparator sorts ``-0.0 < 0.0`` where numpy treats them as
+  equal ties — and the FZ/FZlow/Gray flips mint ``-0.0`` routinely.
+- a *sequential* ``lax.scan`` for weighted prefix sums: a parallel
+  prefix scan re-associates the additions and rounds differently from
+  numpy's left-to-right ``np.cumsum``.
+
+Shape bucketing + the keyed compile cache mirror
+:mod:`repro.core.metrics_jax`: point counts pad to power-of-two buckets
+(``PART_BUCKET_MIN`` floor) with the real count passed as a *traced*
+scalar, the ``uneven_prime`` split table ships as a padded traced
+array, and :func:`partition_cache_stats` exposes the truthful
+compile-count counters benchmarks assert on.
+
+This module imports jax at module level — callers go through
+``repro.core.orderings`` (``backend="jax"`` / the
+``resolve_partition_backend`` chain), which falls back silently to the
+numpy engine when the import fails.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+
+# Bit-identity with the float64 numpy oracle is impossible at f32 (cut
+# targets and weight prefix sums round differently), so this backend
+# requires x64.  Process-wide but safe: the score backends pin f32
+# explicitly on every array they build.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax import lax  # noqa: E402
+
+from .metrics_jax import bucket_size, pad_axis  # noqa: E402
+from .orderings import _split_counts  # noqa: E402
+
+__all__ = ["order_points_jax", "order_points_batched_jax",
+           "partition_cache_stats", "reset_partition_cache"]
+
+PART_BUCKET_MIN = 256  # smallest padded point-count bucket
+TAB_MIN = 16           # smallest padded split-table bucket
+
+_I32 = jnp.int32
+_F64 = jnp.float64
+
+
+# ---------------------------------------------------------------------------
+# split-count table (host side, shipped as a traced array)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _split_table(nparts: int, uneven_prime: bool) -> np.ndarray:
+    """``tab[v] = npl`` of splitting ``v`` parts, for every v <= nparts
+    (0 for v < 2).  Matches ``orderings._split_counts`` exactly; for
+    ``uneven_prime`` a smallest-slice sieve supplies largest prime
+    factors so Table-scale part counts stay cheap to tabulate."""
+    m = int(nparts)
+    tab = np.zeros(m + 1, dtype=np.int32)
+    if m < 2:
+        return tab
+    v = np.arange(2, m + 1, dtype=np.int64)
+    if not uneven_prime:
+        tab[2:] = (v // 2).astype(np.int32)
+        return tab
+    lpf = np.zeros(m + 1, dtype=np.int64)
+    for p in range(2, m + 1):
+        if lpf[p] == 0:  # p is prime: overwrite multiples ascending
+            lpf[p::p] = p
+    p = lpf[2:]
+    k = p // 2
+    npl = np.where(p <= 2, v // 2, (k * v) // p)
+    # cross-check the reference on a few rows (cheap, catches drift)
+    for probe in {2, 3, m, _largest(m)} & set(range(2, m + 1)):
+        assert int(npl[probe - 2]) == _split_counts(probe, True)[0]
+    tab[2:] = npl.astype(np.int32)
+    return tab
+
+
+def _largest(m: int) -> int:
+    return max(2, m - 1)
+
+
+# ---------------------------------------------------------------------------
+# the device sweep
+# ---------------------------------------------------------------------------
+
+def _sweep(cols, sdo, w, npl_tab, n, B, nparts, *, d, sfc, longest_dim,
+           weighted, npts_b, nb_b):
+    """One whole batched partition on device.
+
+    cols    : (d, npts_b) f64 — the shared, padded point cloud.
+    sdo     : (nb_b, d) i32 — per-candidate cut-dimension priority rows.
+    w       : (npts_b,) f64 — point weights (ignored unless weighted).
+    npl_tab : (tab_b,) i32 — npl lookup by current part count.
+    n, B, nparts : traced scalars (real points / candidates / parts), so
+        they stay OUT of the compile key; only the buckets are static.
+
+    Returns (nb_b, npts_b) i32 part numbers in original point order.
+    """
+    N = nb_b * npts_b
+    pos = jnp.arange(N, dtype=_I32)
+    local = pos % npts_b
+    block = pos // npts_b
+    blk0 = block * npts_b
+    real = (block < B) & (local < n)
+    # segment layout: block b = [one real segment of n points][pad tail
+    # as its own closed segment]; whole pad blocks are closed segments
+    seg_start = jnp.where(real, blk0, jnp.where(block < B, blk0 + n, blk0)
+                          ).astype(_I32)
+    seg_size = jnp.where(real, n, jnp.where(block < B, npts_b - n, npts_b)
+                         ).astype(_I32)
+    seg_np = jnp.where(real, nparts, 1).astype(_I32)
+    mu = jnp.zeros(N, dtype=_I32)
+    pts = pos  # global slot id of the point at each position
+    colsN = jnp.tile(cols, (1, nb_b))          # (d, N), diverges via flips
+    wN = jnp.tile(w, nb_b) if weighted else None
+    sdoN = jnp.repeat(sdo, npts_b, axis=0)     # (N, d), loop-invariant
+    dims_col = jnp.arange(d, dtype=_I32)[:, None]
+
+    def cond(state):
+        _, _, _, _, seg_size, seg_np, _ = state
+        return jnp.any((seg_np > 1) & (seg_size > 1))
+
+    def body(state):
+        level, pts, mu, seg_start, seg_size, seg_np, colsN = state
+        act = (seg_np > 1) & (seg_size > 1)
+
+        # --- cut dimension (reference: _pick_cut_dims / alternation) ----
+        if d == 1:
+            cut = jnp.zeros(N, dtype=_I32)
+        elif longest_dim:
+            exts = []
+            for j in range(d):
+                hi = jax.ops.segment_max(colsN[j], seg_start,
+                                         num_segments=N,
+                                         indices_are_sorted=True)
+                lo = jax.ops.segment_min(colsN[j], seg_start,
+                                         num_segments=N,
+                                         indices_are_sorted=True)
+                exts.append((hi - lo)[seg_start])
+            ext = jnp.stack(exts, axis=1)                      # (N, d)
+            pri = jnp.take_along_axis(ext, sdoN, axis=1)
+            best_p = jnp.zeros(N, dtype=_I32)
+            best_e = pri[:, 0]
+            for p in range(1, d):
+                better = pri[:, p] > best_e + 1e-12
+                best_p = jnp.where(better, p, best_p)
+                best_e = jnp.where(better, pri[:, p], best_e)
+            cut = jnp.take_along_axis(sdoN, best_p[:, None], axis=1)[:, 0]
+        else:
+            cut = jnp.take(sdoN, level % d, axis=1).astype(_I32)
+
+        # --- segmented stable sort by the cut coordinate ----------------
+        # ``+ 0.0`` canonicalises -0.0 so XLA's total-order comparator
+        # agrees with numpy's equal-zeros tie handling
+        flat = cut.astype(jnp.int64) * N + jnp.arange(N, dtype=jnp.int64)
+        ckey = colsN.reshape(-1)[flat] + 0.0
+        ops = (seg_start, ckey, pts) + tuple(colsN[j] for j in range(d))
+        ops = lax.sort(ops, num_keys=2, is_stable=True)
+        pts = ops[2]
+        colsN = jnp.stack(ops[3:], axis=0)
+        # mu / seg_* are constant within segments, so the within-segment
+        # permutation leaves them correct without riding the sort
+        rank = pos - seg_start
+
+        # --- cut placement (reference: _uniform_cuts / _padded_cuts) ----
+        npl = npl_tab[seg_np]
+        ratio = npl.astype(_F64) / seg_np.astype(_F64)
+        target = seg_size.astype(_F64) * ratio
+        if not weighted:
+            below = (rank + 1).astype(_F64) < target
+        else:
+            w_cur = wN[pts]
+            is_start = rank == 0
+
+            def scan_f(c, xw):
+                wi, st = xw
+                c = jnp.where(st, wi, c + wi)
+                return c, c
+
+            _, cw = lax.scan(scan_f, jnp.float64(0.0), (w_cur, is_start),
+                             unroll=8)
+            last = (seg_start + seg_size - 1).astype(jnp.int64)
+            below = cw < cw[last] * ratio
+        k = jax.ops.segment_sum(below.astype(_I32), seg_start,
+                                num_segments=N,
+                                indices_are_sorted=True)[seg_start] + 1
+        k = jnp.clip(k, 1, jnp.maximum(seg_size - 1, 1)).astype(_I32)
+
+        # --- flips + part numbers + child segments ----------------------
+        right = rank >= k
+        ar = act & right
+        mu = mu + jnp.where(ar, npl, 0).astype(_I32)
+        if sfc == "Gray":
+            colsN = jnp.where(ar[None, :], -colsN, colsN)
+        elif sfc == "FZ":
+            oh = (dims_col == cut[None, :]) & ar[None, :]
+            colsN = jnp.where(oh, -colsN, colsN)
+        elif sfc == "FZlow":
+            oh = (dims_col == cut[None, :]) & (act & ~right)[None, :]
+            colsN = jnp.where(oh, -colsN, colsN)
+        seg_np = jnp.where(act, jnp.where(right, seg_np - npl, npl),
+                           seg_np).astype(_I32)
+        seg_start = jnp.where(ar, seg_start + k, seg_start).astype(_I32)
+        seg_size = jnp.where(act, jnp.where(right, seg_size - k, k),
+                             seg_size).astype(_I32)
+        return (level + 1, pts, mu, seg_start, seg_size, seg_np, colsN)
+
+    state = (jnp.int32(0), pts, mu, seg_start, seg_size, seg_np, colsN)
+    state = lax.while_loop(cond, body, state)
+    _, pts, mu = state[0], state[1], state[2]
+    out = jnp.zeros(N, dtype=_I32).at[pts].set(mu, unique_indices=True)
+    return out.reshape(nb_b, npts_b)
+
+
+@functools.lru_cache(maxsize=None)
+def _engine(d, sfc, longest_dim, weighted, npts_b, nb_b, tab_b):
+    """One jit-compiled sweep per (engine knobs, shape bucket).
+
+    ``tab_b`` is part of the key even though the function never reads
+    it: every cache entry then sees exactly ONE input shape set, so the
+    ``lru_cache`` hit/miss counters are a truthful compile-count proxy
+    (mirrors ``metrics_jax._scorer``).
+    """
+    del tab_b  # shape part of the key only
+    return jax.jit(functools.partial(
+        _sweep, d=d, sfc=sfc, longest_dim=longest_dim, weighted=weighted,
+        npts_b=npts_b, nb_b=nb_b))
+
+
+def partition_cache_stats() -> dict:
+    """Compile-cache counters of the bucketed jax partitioner."""
+    info = _engine.cache_info()
+    return {"hits": int(info.hits), "misses": int(info.misses),
+            "entries": int(info.currsize)}
+
+
+def reset_partition_cache() -> None:
+    """Drop the compiled sweeps and zero the hit/miss counters."""
+    _engine.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# host entry points (the orderings-module backend contract)
+# ---------------------------------------------------------------------------
+
+def _prepare(coords, nparts, dim_orders, weights, uneven_prime):
+    """Padded device inputs + static bucket keys for one batched call."""
+    n, d = coords.shape
+    B = len(dim_orders)
+    npts_b = bucket_size(n, PART_BUCKET_MIN)
+    nb_b = bucket_size(B, lo=1)
+    cols = pad_axis(np.ascontiguousarray(coords.T), npts_b, axis=1)
+    sdo = np.tile(np.arange(d, dtype=np.int32), (nb_b, 1))
+    sdo[:B] = dim_orders
+    if weights is None:
+        w = np.ones(npts_b, dtype=np.float64)
+    else:
+        w = pad_axis(np.asarray(weights, dtype=np.float64), npts_b)
+    tab = _split_table(int(nparts), bool(uneven_prime))
+    tab_b = bucket_size(len(tab), lo=TAB_MIN)
+    tab = pad_axis(tab, tab_b)
+    return cols, sdo, w, tab, npts_b, nb_b, tab_b
+
+
+def order_points_batched_jax(
+    coords: np.ndarray,
+    nparts: int,
+    sfc: str,
+    *,
+    dim_orders: np.ndarray,
+    weights: np.ndarray | None = None,
+    longest_dim: bool = True,
+    uneven_prime: bool = False,
+) -> np.ndarray:
+    """Device implementation of ``vectorized_order_batched`` (same
+    contract; results bit-identical, asserted in
+    tests/test_partition_jax.py)."""
+    coords = np.asarray(coords, dtype=np.float64)
+    dim_orders = np.atleast_2d(np.asarray(dim_orders, dtype=np.int64))
+    B = len(dim_orders)
+    n, d = coords.shape if coords.ndim == 2 else (len(coords), 1)
+    if nparts <= 1 or n == 0:
+        return np.zeros((B, n), dtype=np.int64)
+    npts_b = bucket_size(n, PART_BUCKET_MIN)
+    if bucket_size(B, lo=1) * npts_b >= 1 << 31:
+        # int32 slot ids bound the device batch; no realistic input
+        from .partition import vectorized_order_batched  # pragma: no cover
+        return vectorized_order_batched(  # pragma: no cover
+            coords, nparts, sfc, dim_orders=dim_orders, weights=weights,
+            longest_dim=longest_dim, uneven_prime=uneven_prime)
+    cols, sdo, w, tab, npts_b, nb_b, tab_b = _prepare(
+        coords, nparts, dim_orders, weights, uneven_prime)
+    fn = _engine(d, sfc, bool(longest_dim), weights is not None,
+                 npts_b, nb_b, tab_b)
+    out = fn(cols, sdo, w, tab, np.int32(n), np.int32(B),
+             np.int32(nparts))
+    return np.asarray(out)[:B, :n].astype(np.int64)
+
+
+def order_points_jax(
+    coords: np.ndarray,
+    nparts: int,
+    sfc: str,
+    *,
+    weights: np.ndarray | None = None,
+    dim_order: np.ndarray | None = None,
+    longest_dim: bool = True,
+    uneven_prime: bool = False,
+) -> np.ndarray:
+    """Device implementation of ``vectorized_order`` (same contract)."""
+    coords = np.asarray(coords, dtype=np.float64)
+    d = coords.shape[1] if coords.ndim == 2 else 1
+    dimo = (np.arange(d, dtype=np.int64) if dim_order is None
+            else np.asarray(dim_order, dtype=np.int64))
+    return order_points_batched_jax(
+        coords, nparts, sfc, dim_orders=dimo[None], weights=weights,
+        longest_dim=longest_dim, uneven_prime=uneven_prime)[0]

@@ -132,7 +132,10 @@ def _mapscore_kernel(*refs, dims, wrap, core_dims, traffic, sdims):
             d = jnp.minimum(d, s - d)
         hops = hops + d
     wh_s[0] += jnp.sum(hops.astype(jnp.float32) * w)
-    th_s[0] += jnp.sum(hops)
+    # pin the accumulation dtype: under jax_enable_x64 (flipped on by
+    # the device partition backend) an unpinned int sum promotes to
+    # int64 and no longer matches the int32 SMEM scratch
+    th_s[0] += jnp.sum(hops, dtype=jnp.int32)
 
     if traffic:
         for k in range(nd):

@@ -1,0 +1,274 @@
+"""One-compiled-program rotation sweep: partition -> match -> score ->
+select, entirely on device.
+
+When the pipeline resolves ``partition_backend="jax"`` AND a jax/pallas
+scoring backend, the whole batched rotation sweep of
+:meth:`MappingPipeline.map` collapses into a single jitted program per
+candidate stack: both sides' level-synchronous partitions
+(:mod:`repro.core.partition_jax`), the part->processor matching
+gathers, the per-candidate coordinate-stack assembly, the metric
+evaluation (the bucketed jax scorer or the fused Pallas kernel), and
+the lexicographic winner selection.  Only the winning permutation, its
+index and the score matrix return to host — zero host<->device
+transfers between the partition and score stages.
+
+Results are bit-identical to the unfused path by construction: the
+partitioner is the bit-identity-tested jax engine, the matching gathers
+mirror ``map_candidates``'s ``part_to_proc``/``mu_t`` assembly integer
+for integer, and the score columns are the same f32-derived values the
+host :class:`CandidateSearch` lexsorts (f32->f64 casts are exact).
+
+The compile cache mirrors ``metrics_jax._scorer`` /
+``partition_jax._engine``: every entry is keyed by the full static
+shape set (machine structure, both partition buckets, message/candidate
+buckets, rotation selector tuples), so one scenario compiles O(1)
+fused programs and :func:`fused_cache_stats` is a truthful
+compile-count proxy.  This module imports jax at module level — the
+pipeline only imports it after ``resolve_partition_backend`` returned
+``"jax"``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core import partition_jax as _pj  # noqa: F401  (enables x64)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import metrics_jax  # noqa: E402
+from repro.core.mapping import MappingResult  # noqa: E402
+from repro.core.metrics_jax import bucket_size, pad_axis  # noqa: E402
+from repro.kernels.mapscore import ops as _mapscore  # noqa: E402
+
+# metric keys the in-program column builder understands (== the full
+# evaluate_candidates contract; anything else bails to the unfused path)
+_KNOWN_KEYS = frozenset(("weighted_hops", "total_hops", "average_hops",
+                         "data_max", "latency_max"))
+
+# bail threshold on the in-program src/dst gather footprint (elements):
+# beyond this the chunked host paths are the better memory citizens
+MAX_FUSED_ELEMS = 1 << 27
+
+
+def _build(*, d_t, task_sfc, d_p, proc_sfc, longest_dim, weighted,
+           tnum, pnum, t_sel, p_sel, npts_bt, nbt_b, npts_bp, nbp_b,
+           tab_b, dims, wrap, core_dims, objective, traffic, score_kind,
+           ne, ne_b, nb_b, ncols, tile, interpret):
+    """The traced body of one fused program (all kwargs static)."""
+    eng_t = _pj._engine(d_t, task_sfc, longest_dim, weighted,
+                        npts_bt, nbt_b, tab_b)
+    eng_p = _pj._engine(d_p, proc_sfc, longest_dim, False,
+                        npts_bp, nbp_b, tab_b)
+    if score_kind == "jax":
+        score_fn = metrics_jax._scorer(dims, wrap, core_dims, traffic,
+                                       ne_b, nb_b)
+    else:
+        score_fn = _mapscore._compiled(dims, wrap, core_dims, traffic,
+                                       ne_b, tile, nb_b, ncols, interpret)
+    ncand = len(t_sel)
+    nut = max(t_sel) + 1   # unique task-side rotations (selector covers
+    nup = max(p_sel) + 1   # 0..nut-1; likewise proc side)
+    t_sel_a = np.asarray(t_sel, dtype=np.int32)
+    p_sel_a = np.asarray(p_sel, dtype=np.int32)
+
+    def run(cols_t, sdo_t, w_t, cols_p, sdo_p, w_p1, tab, edges, ew,
+            acoords, bw):
+        # --- stage 2: both partitions (inner jit calls inline) ---------
+        mu_t = eng_t(cols_t, sdo_t, w_t, tab, jnp.int32(tnum),
+                     jnp.int32(nut), jnp.int32(pnum))[:, :tnum]
+        mu_p = eng_p(cols_p, sdo_p, w_p1, tab, jnp.int32(pnum),
+                     jnp.int32(nup), jnp.int32(pnum))[:nup, :pnum]
+
+        # --- stage 3: vectorised GETMAPPINGARRAYS ----------------------
+        # (mirrors map_candidates' part_to_proc / mu_t gathers)
+        ptp = jnp.full((nup, pnum), -1, dtype=jnp.int32)
+        ptp = ptp.at[jnp.arange(nup)[:, None], mu_p].set(
+            jnp.arange(pnum, dtype=jnp.int32)[None, :])
+        ok = jnp.min(ptp) >= 0
+        t2p = jnp.take_along_axis(ptp[p_sel_a], mu_t[t_sel_a], axis=1)
+
+        # --- stage 4: score + select -----------------------------------
+        cs = acoords[t2p]                          # (ncand, tnum, ndim)
+        cs = jnp.pad(cs, ((0, nb_b - ncand), (0, 0), (0, 0)))
+        src = cs[:, edges[:, 0], :ncols]
+        dst = cs[:, edges[:, 1], :ncols]
+        if score_kind == "jax":
+            ev = score_fn(src, dst, ew, bw)
+            wh = ev["weighted_hops"]
+            th = ev["total_hops"]
+            data = ev.get("data_max")
+            lat = ev.get("latency_max")
+        else:
+            args = [src, dst, ew.reshape(-1, 1)]
+            if traffic:
+                args.append(bw)
+            outf, outi = score_fn(*args)
+            wh, th = outf[:, 0], outi[:, 0]
+            data = outf[:, 1] if traffic else None
+            lat = outf[:, 2] if traffic else None
+
+        def col(key):
+            if key == "weighted_hops":
+                return wh.astype(jnp.float64)
+            if key == "total_hops":
+                return th.astype(jnp.float64)
+            if key == "average_hops":
+                return th.astype(jnp.float64) / ne
+            return (data if key == "data_max" else lat).astype(jnp.float64)
+
+        scores = jnp.stack([col(k) for k in objective], axis=1)[:ncand]
+        keys = tuple(scores[:, j]
+                     for j in reversed(range(scores.shape[1])))
+        best_i = jnp.lexsort(keys)[0].astype(jnp.int32)
+        return best_i, t2p[best_i], scores, ok
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _program(d_t, task_sfc, d_p, proc_sfc, longest_dim, weighted,
+             tnum, pnum, t_sel, p_sel, npts_bt, nbt_b, npts_bp, nbp_b,
+             tab_b, dims, wrap, core_dims, objective, traffic, score_kind,
+             ne, ne_b, nb_b, ncols, tile, interpret):
+    """One jitted fused program per (pipeline knobs, shape bucket).
+
+    Every cache entry sees exactly one input shape set, so the
+    ``lru_cache`` hit/miss counters are a truthful compile-count proxy
+    (:func:`fused_cache_stats`)."""
+    import jax
+    return jax.jit(_build(
+        d_t=d_t, task_sfc=task_sfc, d_p=d_p, proc_sfc=proc_sfc,
+        longest_dim=longest_dim, weighted=weighted, tnum=tnum, pnum=pnum,
+        t_sel=t_sel, p_sel=p_sel, npts_bt=npts_bt, nbt_b=nbt_b,
+        npts_bp=npts_bp, nbp_b=nbp_b, tab_b=tab_b, dims=dims, wrap=wrap,
+        core_dims=core_dims, objective=objective, traffic=traffic,
+        score_kind=score_kind, ne=ne, ne_b=ne_b, nb_b=nb_b, ncols=ncols,
+        tile=tile, interpret=interpret))
+
+
+def fused_cache_stats() -> dict:
+    """Compile-cache counters of the fused whole-pipeline program."""
+    info = _program.cache_info()
+    return {"hits": int(info.hits), "misses": int(info.misses),
+            "entries": int(info.currsize)}
+
+
+def reset_fused_cache() -> None:
+    """Drop the compiled fused programs and zero the counters."""
+    _program.cache_clear()
+
+
+class FusedSweep:
+    """Runs a whole rotation sweep as one compiled device program.
+
+    Constructed by :class:`MappingPipeline` only when the partition
+    backend resolved to ``"jax"`` and the score backend resolved to
+    ``"jax"``/``"pallas"`` with the batched vectorized sweep.
+    :meth:`run` returns the winning :class:`MappingResult` (score and
+    winner index filled in) or ``None`` when the stack is ineligible —
+    the caller then takes the ordinary unfused path.
+    """
+
+    def __init__(self, pipe, score_kind: str):
+        self.pipe = pipe
+        self.score_kind = score_kind
+
+    def run(self, graph, alloc, task_coords, proc_coords, cands,
+            task_weights=None):
+        pipe = self.pipe
+        cfg = pipe.config
+        tc = np.asarray(task_coords, dtype=np.float64)
+        pc = np.asarray(proc_coords, dtype=np.float64)
+        (tnum, td), (pnum, pd) = tc.shape, pc.shape
+        if tnum < pnum or len(cands) < 2:
+            return None
+        objective = pipe.search.objective
+        if not set(objective) <= _KNOWN_KEYS:
+            return None
+        ne = len(graph.edges)
+        if ne == 0:
+            return None
+        machine = alloc.machine
+        traffic = pipe.search.needs_traffic
+        kind = self.score_kind
+        if (kind == "pallas" and traffic
+                and _mapscore.vmem_accumulator_bytes(machine)
+                > _mapscore.VMEM_ACC_BUDGET):
+            kind = "jax"  # same silent fallback the pallas wrapper takes
+
+        ncand = len(cands)
+        ne_b = bucket_size(ne)
+        nb_b = bucket_size(ncand, lo=1)
+        ncols = machine.ndim
+        if 2 * nb_b * ne_b * ncols > MAX_FUSED_ELEMS:
+            return None
+        if bucket_size(tnum, _pj.PART_BUCKET_MIN) * 8 >= 1 << 31:
+            return None  # pragma: no cover - int32 slot-id bound
+
+        # dedup rotations exactly as map_candidates does
+        t_perms = [tuple(c.task_perm) if c.task_perm is not None
+                   else tuple(range(td)) for c in cands]
+        p_perms = [tuple(c.proc_perm) if c.proc_perm is not None
+                   else tuple(range(pd)) for c in cands]
+        ut = sorted(set(t_perms))
+        up = sorted(set(p_perms))
+        t_of = {p: i for i, p in enumerate(ut)}
+        p_of = {p: i for i, p in enumerate(up)}
+        t_sel = tuple(t_of[p] for p in t_perms)
+        p_sel = tuple(p_of[p] for p in p_perms)
+        task_sfc, proc_sfc = pipe._sfc_pair(td, pd)
+
+        cols_t, sdo_t, w_t, tab, npts_bt, nbt_b, tab_b = _pj._prepare(
+            tc, pnum, np.array(ut, dtype=np.int64), task_weights,
+            cfg.uneven_prime)
+        cols_p, sdo_p, w_p1, _, npts_bp, nbp_b, _ = _pj._prepare(
+            pc, pnum, np.array(up, dtype=np.int64), None,
+            cfg.uneven_prime)
+
+        edges = jnp.asarray(
+            pad_axis(np.asarray(graph.edges, dtype=np.int32), ne_b))
+        w_np = np.ones(ne) if graph.weights is None else \
+            np.asarray(graph.weights, dtype=np.float64)
+        ew = jnp.asarray(pad_axis(w_np.astype(np.float32), ne_b))
+        acoords = jnp.asarray(alloc.coords, dtype=jnp.int32)
+
+        nd = machine.ndim - machine.core_dims
+        tile = min(_mapscore.TILE_MAX, ne_b)
+        interpret = not _mapscore._on_tpu()
+        if kind == "jax":
+            bw = tuple(jnp.asarray(machine.bw_field(k), dtype=jnp.float32)
+                       for k in range(nd)) if traffic else ()
+        else:
+            if traffic:
+                inv = np.concatenate([
+                    1.0 / np.asarray(
+                        machine.bw(k, np.arange(int(machine.dims[k]))),
+                        dtype=np.float64)
+                    for k in range(nd)]) if nd else np.zeros(0)
+                bw = jnp.asarray(inv.reshape(-1, 1), dtype=jnp.float32)
+            else:
+                bw = ()
+
+        fn = _program(td, task_sfc, pd, proc_sfc, bool(cfg.longest_dim),
+                      task_weights is not None, tnum, pnum, t_sel, p_sel,
+                      npts_bt, nbt_b, npts_bp, nbp_b, tab_b,
+                      tuple(int(x) for x in machine.dims),
+                      tuple(bool(x) for x in machine.wrap),
+                      machine.core_dims, tuple(objective), traffic, kind,
+                      ne, ne_b, nb_b, ncols, tile, bool(interpret))
+        best_i, t2p, scores, ok = fn(cols_t, sdo_t, w_t, cols_p, sdo_p,
+                                     w_p1, tab, edges, ew, acoords, bw)
+        if not bool(ok):
+            return None  # a part got no processor: unfused path raises
+        best_i = int(best_i)
+        c = cands[best_i]
+        best = MappingResult(
+            np.asarray(t2p, dtype=np.int32),
+            rotation=(tuple(c.task_perm or ()), tuple(c.proc_perm or ())))
+        best.score = float(np.asarray(scores)[best_i][0])
+        best.stats.update(fused=True, fused_score_backend=kind,
+                          winner_index=best_i)
+        return best

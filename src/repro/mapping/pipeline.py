@@ -28,13 +28,15 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 import numpy as np
 
 from repro.core.kmeans import closest_subset
 from repro.core.machine import Allocation
 from repro.core.mapping import MappingResult, match_parts
-from repro.core.orderings import order_points, order_points_batched
+from repro.core.orderings import (order_points, order_points_batched,
+                                  resolve_partition_backend)
 from repro.core.transforms import (apply_permutation, box_lift, drop_dims,
                                    scale_by_bandwidth, shift_torus)
 from repro.mapping.candidates import CandidateSearch, rotation_candidates
@@ -51,6 +53,15 @@ class PipelineConfig:
                      alternation).
       uneven_prime : Z2_2 — largest-prime-divisor uneven bisection.
       backend      : ``order_points`` backend ("vectorized"/"recursive").
+      partition_backend : partition engine — "numpy" (host reference)
+                     or "jax" (device ``partition_jax`` engine,
+                     bit-identical permutations, resolved ONCE per
+                     pipeline down the silent jax -> numpy chain).
+                     With a jax/pallas score backend and the batched
+                     vectorized sweep, the whole partition -> match ->
+                     score -> select chain fuses into ONE compiled
+                     program per candidate stack
+                     (:mod:`repro.mapping.fused`).
 
     Machine-transform stage:
       shift           : torus wrap-around shifting of machine coords.
@@ -99,6 +110,7 @@ class PipelineConfig:
     uneven_prime: bool = False
     longest_dim: bool = True
     backend: str = "vectorized"
+    partition_backend: str = "numpy"
     objective: str | tuple = "weighted_hops"
     sweep: str = "batched"
     score_backend: str = "numpy"
@@ -145,8 +157,29 @@ class MappingPipeline:
 
     def __init__(self, config: PipelineConfig | None = None):
         self.config = config or PipelineConfig()
-        self.search = CandidateSearch(self.config.objective,
-                                      backend=self.config.score_backend)
+        cfg = self.config
+        self.search = CandidateSearch(cfg.objective,
+                                      backend=cfg.score_backend)
+        # resolve the partition backend ONCE (silent jax -> numpy chain,
+        # mirrors the score-backend discipline): hot paths then dispatch
+        # on plain strings instead of re-probing the import per call
+        self.partition_backend = resolve_partition_backend(
+            cfg.partition_backend)
+        self.order_backend = ("jax" if (self.partition_backend == "jax"
+                                        and cfg.backend == "vectorized")
+                              else cfg.backend)
+        # fused whole-pipeline program: partition + match + score +
+        # select as ONE compiled program per candidate stack — only when
+        # both stages resolved to device backends and the sweep is the
+        # batched vectorized one (the fused gathers mirror it exactly)
+        self._fused = None
+        if (self.order_backend == "jax" and cfg.sweep == "batched"
+                and cfg.sfc != "H"):
+            from repro.core.metrics import get_evaluator
+            resolved_score, _ = get_evaluator(cfg.score_backend)
+            if resolved_score in ("jax", "pallas"):
+                from repro.mapping.fused import FusedSweep
+                self._fused = FusedSweep(self, resolved_score)
 
     # -- stage 1: machine transforms ------------------------------------
 
@@ -221,11 +254,11 @@ class MappingPipeline:
         mu_t = order_points(tc, np_parts, task_sfc, weights=task_weights,
                             longest_dim=cfg.longest_dim,
                             uneven_prime=cfg.uneven_prime,
-                            backend=cfg.backend)
+                            backend=self.order_backend)
         mu_p = order_points(pc, np_parts, proc_sfc,
                             longest_dim=cfg.longest_dim,
                             uneven_prime=cfg.uneven_prime,
-                            backend=cfg.backend)
+                            backend=self.order_backend)
         t2p = match_parts(mu_t, mu_p)
         if subset is not None:
             t2p = subset[t2p]
@@ -289,7 +322,8 @@ class MappingPipeline:
         p_of = {p: i for i, p in enumerate(up)}
 
         common = dict(longest_dim=cfg.longest_dim,
-                      uneven_prime=cfg.uneven_prime, backend=cfg.backend)
+                      uneven_prime=cfg.uneven_prime,
+                      backend=self.order_backend)
         mu_t = order_points_batched(tc, np_parts, task_sfc,
                                     dim_orders=np.array(ut),
                                     weights=task_weights, **common)
@@ -337,17 +371,37 @@ class MappingPipeline:
             return map_hierarchical(self, graph, alloc,
                                     task_coords=task_coords,
                                     task_weights=task_weights)
+        t0 = time.perf_counter()
         pc = self.machine_coords(alloc)
         tc = np.asarray(task_coords if task_coords is not None
                         else graph.coords, dtype=np.float64)
         cands = rotation_candidates(tc.shape[1], pc.shape[1], cfg.rotations)
-        results = self.map_candidates(tc, pc, cands,
-                                      task_weights=task_weights)
-        if len(results) == 1:
-            best = results[0]
-        else:
-            best, best_i, scores = self.search.best(graph, alloc, results)
-            best.score = float(scores[best_i][0])
+        timings = {}
+        best = None
+        if self._fused is not None:
+            t1 = time.perf_counter()
+            best = self._fused.run(graph, alloc, tc, pc, cands,
+                                   task_weights=task_weights)
+            if best is not None:
+                # partition + match + score ran as one device program;
+                # the stage split does not exist on this path
+                timings["fused_s"] = time.perf_counter() - t1
+        if best is None:
+            t1 = time.perf_counter()
+            results = self.map_candidates(tc, pc, cands,
+                                          task_weights=task_weights)
+            timings["partition_s"] = time.perf_counter() - t1
+            t1 = time.perf_counter()
+            if len(results) == 1:
+                best = results[0]
+            else:
+                best, best_i, scores = self.search.best(graph, alloc,
+                                                        results)
+                best.score = float(scores[best_i][0])
+            timings["score_s"] = time.perf_counter() - t1
+        timings["total_s"] = time.perf_counter() - t0
         best.stats.update(hierarchy="flat",
-                          sweep_points=int(len(tc) + alloc.n))
+                          sweep_points=int(len(tc) + alloc.n),
+                          partition_backend=self.partition_backend,
+                          timings=timings)
         return best

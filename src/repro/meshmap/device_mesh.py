@@ -58,8 +58,9 @@ def device_coords(devices, machine) -> np.ndarray:
 def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
                   *, devices=None, machine=None, axis_bytes=None,
                   rotations: int = 16, return_report: bool = False,
-                  score_backend: str = "numpy", hierarchy: str = "flat",
-                  service=None):
+                  score_backend: str = "numpy",
+                  partition_backend: str = "numpy",
+                  hierarchy: str = "flat", service=None):
     """Build a Mesh whose device order minimises modeled link traffic.
 
     Candidate-selection (the paper's §4.3 rotation search, generalised):
@@ -90,7 +91,8 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
     alloc = Allocation(machine, device_coords(devices, machine).astype(int))
     best, best_metrics, base_metrics = select_mapping(
         graph, alloc, ab, rotations=rotations, score_backend=score_backend,
-        hierarchy=hierarchy, service=service)
+        partition_backend=partition_backend, hierarchy=hierarchy,
+        service=service)
     order = best.task_to_proc  # logical flat index -> device index
     dev_array = np.array(devices, dtype=object)[order].reshape(axis_sizes)
     mesh = Mesh(dev_array, tuple(axis_names))
@@ -100,8 +102,9 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
 
 
 def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
-                   score_backend: str = "numpy", hierarchy: str = "flat",
-                   service=None):
+                   score_backend: str = "numpy",
+                   partition_backend: str = "numpy",
+                   hierarchy: str = "flat", service=None):
     """Candidate search: default order + FZ mappings under raw and
     traffic-scaled task coordinates x rotations; returns
     (best MappingResult, best metrics, default metrics).
@@ -117,7 +120,13 @@ def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
     :mod:`repro.kernels.mapscore`, falling back jax -> numpy when the
     kernel stack is unavailable).  The identity/default mapping is
     listed first, so on ties the search is never worse than jax's
-    enumeration order.
+    enumeration order.  ``partition_backend="jax"`` additionally moves
+    the level-synchronous partitioner on device (silent jax -> numpy
+    fallback, bit-identical permutations); combined with a jax/pallas
+    score backend each pipeline pass's partition -> match -> score ->
+    select chain runs as ONE compiled program per candidate stack
+    (:mod:`repro.mapping.fused`) — the cold-path win the ``end2end``
+    benchmark guards.
 
     ``hierarchy="node"`` routes each pipeline call through the
     hierarchical coarsen -> map -> refine subsystem (:mod:`repro.hier`)
@@ -141,7 +150,8 @@ def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
         for rot in (0, rotations):
             config = PipelineConfig(
                 sfc="FZ", shift=True, bandwidth_scale=True, rotations=rot,
-                score_backend=score_backend, hierarchy=hierarchy)
+                score_backend=score_backend,
+                partition_backend=partition_backend, hierarchy=hierarchy)
             if service is not None:
                 from repro.serve.engine import MappingRequest
                 resp = service.map(MappingRequest(graph, alloc, config,

@@ -146,6 +146,18 @@ def test_padded_buffer_overflow_falls_back_to_loop(monkeypatch):
     _assert_equiv(coords, 16, "FZ", weights=w)
 
 
+def test_exact_engine_deep_part_counts():
+    """Deep recursion (nparts ~ npoints): the O(nseg) segment-table
+    interleave that replaced the per-level argsort rebuild must stay bit
+    identical when the table grows by hundreds of segments per level."""
+    rng = np.random.default_rng(29)
+    coords = np.repeat(rng.normal(size=(256, 2)), 4, axis=0)  # force exact
+    for nparts in (613, 1024):
+        _assert_equiv(coords, nparts, "FZ")
+    w = rng.random(len(coords))
+    _assert_equiv(coords, 1021, "Gray", weights=w, uneven_prime=True)
+
+
 def test_exact_engine_matches_reference_directly():
     rng = np.random.default_rng(11)
     coords = rng.normal(size=(200, 3))

@@ -1,0 +1,272 @@
+"""Bit-identity suite for the device (JAX) partition backend.
+
+The numpy engines (``partition.vectorized_order*``, whose lexsort tie
+order is the oracle) define the contract: the jax backend must return
+IDENTICAL permutations for every configuration — random dims, weights,
+duplicate coordinates, uneven prime part counts, padded-bucket tails —
+plus the resolved-once fallback chain, truthful compile-cache counters,
+and the fused whole-pipeline program (partition + match + score +
+select as ONE jitted program).  Property-style via seeded numpy RNG (no
+hypothesis dependency, matching tests/test_partition.py)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core import orderings
+from repro.core import partition_jax
+from repro.core.orderings import (order_points, order_points_batched,
+                                  resolve_partition_backend)
+
+SFCS = ("Z", "Gray", "FZ", "FZlow")
+
+
+def _assert_jax_equiv(coords, nparts, sfc, **kw):
+    a = order_points(coords, nparts, sfc, backend="vectorized", **kw)
+    b = order_points(coords, nparts, sfc, backend="jax", **kw)
+    assert np.array_equal(a, b), (
+        f"jax backend mismatch: sfc={sfc} nparts={nparts} kw={kw} "
+        f"ndiff={(a != b).sum()}/{len(a)}")
+    return a
+
+
+# ---------------------------------------------------------------------------
+# property-style bit-identity across every knob
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(16))
+def test_random_points_all_knobs(seed):
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(1, 5))
+    n = int(rng.integers(2, 400))
+    nparts = int(rng.integers(1, 70))
+    sfc = SFCS[seed % 4]
+    weights = rng.random(n) if seed % 3 == 0 else None
+    uneven = bool(seed % 2)
+    longest = seed % 5 != 0
+    dim_order = rng.permutation(d) if seed % 4 == 0 else None
+    coords = rng.normal(size=(n, d))
+    if seed % 6 == 0:  # duplicate-heavy: exercises the tie lexsort order
+        coords = np.repeat(coords[: max(n // 5, 1)], 5, axis=0)
+        if weights is not None:
+            weights = rng.random(len(coords))
+    _assert_jax_equiv(coords, nparts, sfc, weights=weights,
+                      uneven_prime=uneven, longest_dim=longest,
+                      dim_order=dim_order)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_batched_bit_identity(seed):
+    rng = np.random.default_rng(100 + seed)
+    d = int(rng.integers(2, 4))
+    n = int(rng.integers(8, 300))
+    nparts = int(rng.integers(2, 48))
+    sfc = SFCS[seed % 4]
+    B = int(rng.integers(1, 5))
+    dim_orders = np.stack([rng.permutation(d) for _ in range(B)])
+    weights = rng.random(n) if seed % 2 else None
+    coords = rng.normal(size=(n, d))
+    kw = dict(dim_orders=dim_orders, weights=weights,
+              uneven_prime=bool(seed % 3 == 0), longest_dim=seed % 4 != 1)
+    a = order_points_batched(coords, nparts, sfc, backend="vectorized",
+                             **kw)
+    b = order_points_batched(coords, nparts, sfc, backend="jax", **kw)
+    assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("nparts", [7, 97])
+def test_uneven_prime_parts_on_grids(nparts):
+    ix = np.indices((16, 16))
+    coords = np.stack([c.ravel() for c in ix], axis=1).astype(float)
+    _assert_jax_equiv(coords, nparts, "FZ", uneven_prime=True)
+
+
+def test_zero_weight_points_and_more_parts_than_points():
+    rng = np.random.default_rng(7)
+    coords = rng.normal(size=(40, 2))
+    w = rng.random(40)
+    w[::3] = 0.0
+    _assert_jax_equiv(coords, 8, "Gray", weights=w)
+    _assert_jax_equiv(rng.normal(size=(5, 2)), 16, "FZ")
+
+
+def test_padded_bucket_tails():
+    """Point counts straddling the pow2 bucket boundary: the padded
+    tail slots must never leak into the result."""
+    rng = np.random.default_rng(11)
+    for n in (partition_jax.PART_BUCKET_MIN - 1,
+              partition_jax.PART_BUCKET_MIN,
+              partition_jax.PART_BUCKET_MIN + 1, 511, 513):
+        coords = rng.normal(size=(n, 3))
+        _assert_jax_equiv(coords, 32, "FZ", weights=rng.random(n))
+
+
+# ---------------------------------------------------------------------------
+# scenario registry: every machine x workload partitions identically
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["minighost", "homme", "random"])
+@pytest.mark.parametrize("allocation",
+                         ["xk7_sparse", "bgq_block", "tpu_mesh",
+                          "fat_tree"])
+def test_scenario_registry_bit_identity(workload, allocation):
+    from repro.mapping.pipeline import MappingPipeline, PipelineConfig
+    from repro.serve.scenarios import Scenario
+
+    sc = Scenario(workload, allocation, scale=192)
+    graph = sc.graph()
+    alloc = sc.alloc_for(graph)
+    pipe = MappingPipeline(PipelineConfig(sfc="FZ", shift=True))
+    pc = pipe.machine_coords(alloc)
+    for coords, w in ((graph.coords.astype(float), None),
+                      (pc, None)):
+        d = coords.shape[1]
+        dim_orders = np.stack([np.arange(d), np.arange(d)[::-1]])
+        nparts = min(len(coords), len(pc))
+        a = order_points_batched(coords, nparts, "FZ",
+                                 dim_orders=dim_orders, weights=w,
+                                 backend="vectorized")
+        b = order_points_batched(coords, nparts, "FZ",
+                                 dim_orders=dim_orders, weights=w,
+                                 backend="jax")
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# fallback chain + compile-cache counters
+# ---------------------------------------------------------------------------
+
+def test_resolve_partition_backend():
+    assert resolve_partition_backend("numpy") == "numpy"
+    assert resolve_partition_backend("jax") == "jax"  # jax importable here
+    with pytest.raises(ValueError):
+        resolve_partition_backend("pallas")
+
+
+def test_fallback_when_jax_absent(monkeypatch):
+    """With the import sentinel pinned to 'unavailable' the jax backend
+    silently produces the numpy result and the pipeline resolves
+    numpy."""
+    from repro.mapping.pipeline import MappingPipeline, PipelineConfig
+
+    monkeypatch.setattr(orderings, "_JAX_PART", None)
+    assert resolve_partition_backend("jax") == "numpy"
+    rng = np.random.default_rng(3)
+    coords = rng.normal(size=(64, 2))
+    a = order_points(coords, 8, "FZ", backend="jax")
+    b = order_points(coords, 8, "FZ", backend="vectorized")
+    assert np.array_equal(a, b)
+    pipe = MappingPipeline(PipelineConfig(partition_backend="jax"))
+    assert pipe.partition_backend == "numpy"
+    assert pipe.order_backend == "vectorized"
+    assert pipe._fused is None
+
+
+def test_compile_cache_counters():
+    """One compile per (knobs, bucket); repeat shapes must hit."""
+    partition_jax.reset_partition_cache()
+    rng = np.random.default_rng(5)
+    coords = rng.normal(size=(100, 3))
+    order_points(coords, 8, "FZ", backend="jax")
+    stats = partition_jax.partition_cache_stats()
+    assert stats == {"hits": 0, "misses": 1, "entries": 1}
+    order_points(rng.normal(size=(90, 3)), 12, "FZ", backend="jax")
+    stats = partition_jax.partition_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+
+
+def test_split_table_matches_reference():
+    from repro.core.orderings import _split_counts
+    for uneven in (False, True):
+        tab = partition_jax._split_table(97, uneven)
+        for v in range(2, 98):
+            assert tab[v] == _split_counts(v, uneven)[0], (v, uneven)
+
+
+# ---------------------------------------------------------------------------
+# fused whole-pipeline program
+# ---------------------------------------------------------------------------
+
+def _mesh_problem():
+    from repro.core import (block_allocation, logical_mesh_graph,
+                            tpu_v5e_pod)
+    machine = tpu_v5e_pod(side=8)
+    alloc = block_allocation(machine)
+    graph = logical_mesh_graph((8, 8), (8.0, 64.0), ("data", "model"))
+    return graph, alloc
+
+
+@pytest.mark.parametrize("score_backend", ["jax", "pallas"])
+@pytest.mark.parametrize("objective",
+                         ["weighted_hops",
+                          ("latency_max", "weighted_hops")])
+def test_fused_pipeline_matches_numpy(score_backend, objective):
+    """partition=jax + score=jax/pallas runs the sweep as ONE compiled
+    program and returns the same winner as the all-numpy pipeline."""
+    from repro.mapping.pipeline import MappingPipeline, PipelineConfig
+
+    graph, alloc = _mesh_problem()
+    base = MappingPipeline(PipelineConfig(rotations=4, objective=objective)
+                           ).map(graph, alloc)
+    pipe = MappingPipeline(PipelineConfig(
+        rotations=4, objective=objective, score_backend=score_backend,
+        partition_backend="jax"))
+    assert pipe._fused is not None
+    fused = pipe.map(graph, alloc)
+    assert fused.stats.get("fused") is True
+    assert "fused_s" in fused.stats["timings"]
+    assert np.array_equal(base.task_to_proc, fused.task_to_proc)
+    assert base.rotation == fused.rotation
+    assert np.isclose(base.score, fused.score, rtol=1e-5)
+
+
+def test_fused_program_compiles_once():
+    """Repeat map() calls on the same shapes reuse ONE fused program
+    (zero host<->device transfers between stages: the whole chain is a
+    single cache entry)."""
+    from repro.mapping import fused as fused_mod
+    from repro.mapping.pipeline import MappingPipeline, PipelineConfig
+
+    graph, alloc = _mesh_problem()
+    pipe = MappingPipeline(PipelineConfig(
+        rotations=4, score_backend="jax", partition_backend="jax"))
+    fused_mod.reset_fused_cache()
+    r1 = pipe.map(graph, alloc)
+    stats = fused_mod.fused_cache_stats()
+    assert stats["misses"] == 1 and stats["entries"] == 1
+    r2 = pipe.map(graph, alloc)
+    stats = fused_mod.fused_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+    assert np.array_equal(r1.task_to_proc, r2.task_to_proc)
+
+
+def test_fused_hierarchical_matches_numpy():
+    from repro.mapping.pipeline import MappingPipeline, PipelineConfig
+
+    graph, alloc = _mesh_problem()
+    base = MappingPipeline(PipelineConfig(rotations=4, hierarchy="node")
+                           ).map(graph, alloc)
+    fused = MappingPipeline(PipelineConfig(
+        rotations=4, hierarchy="node", score_backend="jax",
+        partition_backend="jax")).map(graph, alloc)
+    assert np.array_equal(base.task_to_proc, fused.task_to_proc)
+    assert "refine_s" in fused.stats["timings"]
+    assert fused.stats["partition_backend"] == "jax"
+
+
+def test_unfused_jax_partition_stage_timings():
+    """partition=jax with the numpy scorer: no fused program, but the
+    per-stage timings and backend attribution must still be recorded."""
+    from repro.mapping.pipeline import MappingPipeline, PipelineConfig
+
+    graph, alloc = _mesh_problem()
+    pipe = MappingPipeline(PipelineConfig(rotations=4,
+                                          partition_backend="jax"))
+    assert pipe._fused is None and pipe.order_backend == "jax"
+    base = MappingPipeline(PipelineConfig(rotations=4)).map(graph, alloc)
+    res = pipe.map(graph, alloc)
+    assert np.array_equal(base.task_to_proc, res.task_to_proc)
+    t = res.stats["timings"]
+    assert {"partition_s", "score_s", "total_s"} <= set(t)
+    assert res.stats["partition_backend"] == "jax"
