@@ -49,6 +49,10 @@ POLICY = {
                 "min_ratio": {"speedup": 0.5}},
     "serve": {"exact": ["coalesced_identical", "warm_identical"],
               "min_ratio": {"warm_speedup": 0.5}},
+    "faults": {"exact": ["failed", "degraded_all", "bijection_ok",
+                         "identical", "healthy_fused_identical",
+                         "availability", "breakers_open"],
+               "near": {"quality_worst": 0.05}},
     "hier": {"exact": ["refine_monotone"],
              "near": {"wh_ratio": 0.05, "wh_ratio_sparse": 0.05,
                       "points_ratio": 0.02},

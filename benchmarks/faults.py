@@ -1,0 +1,259 @@
+"""Resilience under injected faults (the `faults` benchmark entry,
+ISSUE 7).
+
+Replays the standard single-fault schedules against a fresh
+:class:`repro.serve.MappingService` each — scorer compile failure,
+device OOM, device-partition failure, a hung stage under a request
+deadline, and a cache-eviction storm — and asserts the availability and
+quality oracles of the degradation ladder:
+
+- **availability = 1**: every submitted request is served; no schedule
+  surfaces an error to the caller (``failed = 0``).
+- **degraded_all = 1**: every schedule that CAN degrade (a device rung
+  exists to shed) served at least one request on exactly the expected
+  ladder rung, recorded in ``MappingResult.stats["degraded"]``.
+- **bijection_ok / identical = 1**: every served mapping is a valid
+  task->processor bijection, and every degraded result is bit-identical
+  to the healthy (no-fault) result of the same request — the ladder's
+  backend rungs only move WHERE the algorithm runs.
+- **quality_worst**: the worst relative objective-score drift of any
+  degraded result vs its healthy reference (0.0 when bit-identity
+  holds, bounded by the documented 5% ``refine_0`` bound otherwise).
+- **healthy_fused_identical = 1**: with nothing injected, the service
+  returns exactly the direct pipeline result (the PR 6 fused program
+  where eligible) and no breaker ever opens.
+
+The whole run executes inside ``faults.isolated()`` so an ambient
+``REPRO_FAULTS`` schedule (the CI chaos job) cannot perturb the exact
+counts; each schedule's specs are installed programmatically.
+
+Without jax the device schedules have no rung to shed and are skipped
+(``degraded_all`` is then vacuously 1); the host-path schedules (slow
+stage, eviction storm) still run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro import faults
+from repro.mapping import shared_pipeline
+from repro.serve import MappingService, get_scenario
+
+BASE = "minighost-xk7_sparse-flat-wh"
+SEEDS = (0, 1)
+
+# the slow-stage schedule: the first rung hangs DELAY seconds, well past
+# the service deadline; the terminal host rung then serves the request
+SLOW_DELAY = 1.0
+DEADLINE_S = 0.25
+
+
+def _has_jax() -> bool:
+    from repro.core.orderings import resolve_partition_backend
+    return resolve_partition_backend("jax") == "jax"
+
+
+def _schedules(jax: bool) -> list[dict]:
+    """The standard single-fault schedules: (name, config overrides,
+    fault specs, service kwargs, expected ladder rung)."""
+    out = []
+    if jax:
+        out += [
+            dict(name="scorer_compile",
+                 cfg=dict(score_backend="jax", partition_backend="numpy"),
+                 specs=[("score.jax", "compile", {})],
+                 svc={}, rung="score_numpy"),
+            dict(name="device_oom",
+                 cfg=dict(score_backend="pallas",
+                          partition_backend="numpy"),
+                 specs=[("score.pallas", "oom", {}),
+                        ("score.jax", "oom", {})],
+                 svc={}, rung="score_numpy"),
+            dict(name="partition_fault",
+                 cfg=dict(score_backend="numpy", partition_backend="jax"),
+                 specs=[("partition.jax", "error", {})],
+                 svc={}, rung="partition_numpy"),
+            dict(name="slow_deadline",
+                 cfg=dict(score_backend="jax", partition_backend="numpy"),
+                 specs=[("serve.compute", "slow",
+                         {"delay": SLOW_DELAY, "count": 1})],
+                 svc=dict(deadline_s=DEADLINE_S), rung="score_numpy"),
+        ]
+    out.append(
+        dict(name="cache_storm", cfg={},
+             specs=[("serve.cache", "evict", {"after": 1, "count": 1})],
+             svc={}, rung=None))
+    return out
+
+
+def _requests(scale: int, cfg_overrides: dict, rotations: int = 4):
+    reqs = []
+    for seed in SEEDS:
+        sc = get_scenario(BASE, scale=scale, seed=seed)
+        cfg = dataclasses.replace(sc.config(), rotations=rotations,
+                                  **cfg_overrides)
+        reqs.append(dataclasses.replace(sc.request(), config=cfg,
+                                        _signature=None))
+    return reqs
+
+
+def _bijection_ok(result) -> bool:
+    t2p = np.asarray(result.task_to_proc)
+    return bool(np.array_equal(np.sort(t2p), np.arange(len(t2p))))
+
+
+def _quality(degraded, healthy) -> float:
+    """Relative objective drift of a degraded result vs healthy (0.0
+    under bit-identity; score-based when the permutations differ)."""
+    if np.array_equal(degraded.task_to_proc, healthy.task_to_proc):
+        return 0.0
+    d, h = degraded.score, healthy.score
+    if (isinstance(d, float) and isinstance(h, float)
+            and np.isfinite(d) and np.isfinite(h)):
+        return abs(d - h) / max(abs(h), 1e-12)
+    return 1.0  # scores incomparable and permutations differ: worst case
+
+
+def run(scale: int = 4096, *, quiet: bool = False) -> dict:
+    jax = _has_jax()
+    schedules = _schedules(jax)
+    with faults.isolated():
+        # healthy references: the no-fault result of every (seed,
+        # config) pair, computed ONCE through the shared pipeline pool
+        healthy: dict[tuple, object] = {}
+
+        def reference(sched, req, seed):
+            key = (sched["name"], seed)
+            if key not in healthy:
+                healthy[key] = shared_pipeline(req.config).map(
+                    req.graph, req.alloc)
+            return healthy[key]
+
+        submitted = served = failed = degraded = 0
+        bijection_ok = identical = True
+        degraded_all = True
+        quality_worst = 0.0
+        deadline_misses = storms = 0
+        t0 = time.perf_counter()
+        per_schedule = {}
+        for sched in schedules:
+            svc = MappingService(**sched["svc"])
+            specs = [faults.install(site, kind, **opts)
+                     for site, kind, opts in sched["specs"]]
+            reqs = _requests(scale, sched["cfg"])
+            responses = []
+            try:
+                for seed, req in zip(SEEDS, reqs):
+                    submitted += 1
+                    try:
+                        responses.append((seed, req, svc.map(req)))
+                    except Exception:  # noqa: BLE001 - the oracle itself
+                        failed += 1
+            finally:
+                for spec in specs:
+                    faults.remove(spec)
+            # oracles run with the schedule's specs REMOVED, so the
+            # healthy references cannot themselves hit the fault
+            hits = 0
+            for seed, req, resp in responses:
+                served += 1
+                ref = reference(sched, req, seed)
+                bijection_ok &= _bijection_ok(resp.result)
+                q = _quality(resp.result, ref)
+                quality_worst = max(quality_worst, q)
+                identical &= q == 0.0
+                rung = resp.result.stats.get("degraded")
+                if rung is not None:
+                    degraded += 1
+                    hits += rung == sched["rung"]
+            st = svc.stats()
+            deadline_misses += st["deadline_misses"]
+            storms += st["cache"]["storms"]
+            if sched["rung"] is not None:
+                degraded_all &= hits >= 1
+            per_schedule[sched["name"]] = {
+                "degraded": st["degraded"], "expected_rung_hits": hits,
+                "rung_failures": st["rung_failures"]}
+        t_faulted = time.perf_counter() - t0
+
+        # healthy pass: no faults, fresh service — bit-identical to the
+        # direct pipeline (fused where eligible) and breakers stay shut
+        hcfg = (dict(score_backend="jax", partition_backend="jax")
+                if jax else {})
+        svc = MappingService()
+        healthy_identical = True
+        breakers_open = 0
+        t0 = time.perf_counter()
+        for req in _requests(scale, hcfg):
+            resp = svc.map(req)
+            direct = shared_pipeline(req.config).map(req.graph, req.alloc)
+            healthy_identical &= bool(np.array_equal(
+                resp.result.task_to_proc, direct.task_to_proc))
+            healthy_identical &= "degraded" not in resp.result.stats
+        t_healthy = time.perf_counter() - t0
+        st = svc.stats()
+        breakers_open = sum(v["state"] != "closed" or v["opens"] > 0
+                            for v in st["breakers"].values())
+
+    availability = served / max(submitted, 1)
+    out = {
+        "scale": scale, "jax": int(jax),
+        "nschedules": len(schedules), "submitted": submitted,
+        "served": served, "failed": failed, "degraded": degraded,
+        "degraded_all": int(degraded_all),
+        "availability": availability,
+        "bijection_ok": int(bijection_ok), "identical": int(identical),
+        "quality_worst": quality_worst,
+        "deadline_misses": deadline_misses, "storms": storms,
+        "healthy_fused_identical": int(healthy_identical),
+        "breakers_open": breakers_open,
+        "t_faulted_s": t_faulted, "t_healthy_s": t_healthy,
+        "per_schedule": per_schedule,
+    }
+    if not quiet:
+        print(f"[faults] {len(schedules)} schedules x {len(SEEDS)} "
+              f"requests at scale {scale}: {served}/{submitted} served "
+              f"({failed} failed), {degraded} degraded, worst quality "
+              f"drift {quality_worst:.4f}, faulted {t_faulted*1e3:.0f}ms"
+              f" / healthy {t_healthy*1e3:.0f}ms")
+    assert failed == 0, f"{failed} requests surfaced errors"
+    assert bijection_ok, "a served mapping was not a bijection"
+    assert degraded_all, f"expected rung missed: {per_schedule}"
+    assert healthy_identical, "healthy path diverged from the pipeline"
+    assert breakers_open == 0, st["breakers"]
+    assert quality_worst <= 0.05, (
+        f"degraded quality drift {quality_worst:.4f} above the "
+        f"documented 5% refine_0 bound")
+    return out
+
+
+def headline(results: dict) -> str:
+    return (f"scale={results['scale']};"
+            f"nschedules={results['nschedules']};"
+            f"submitted={results['submitted']};"
+            f"failed={results['failed']};"
+            f"availability={results['availability']:.2f};"
+            f"degraded={results['degraded']};"
+            f"degraded_all={results['degraded_all']};"
+            f"bijection_ok={results['bijection_ok']};"
+            f"identical={results['identical']};"
+            f"quality_worst={results['quality_worst']:.4f};"
+            f"deadline_misses={results['deadline_misses']};"
+            f"storms={results['storms']};"
+            f"healthy_fused_identical={results['healthy_fused_identical']};"
+            f"breakers_open={results['breakers_open']};"
+            f"faulted_us={results['t_faulted_s']*1e6:.0f};"
+            f"healthy_us={results['t_healthy_s']*1e6:.0f}")
+
+
+def main():
+    results = run(scale=1 << 14)
+    print(f"faults,{results['t_faulted_s']*1e6:.0f},{headline(results)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -203,8 +203,9 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (hier, homme_bgq, homme_titan, mapping_tpu,
-                            minighost, roofline, serve, table1_orderings)
+    from benchmarks import (faults, hier, homme_bgq, homme_titan,
+                            mapping_tpu, minighost, roofline, serve,
+                            table1_orderings)
 
     def partition_bench():
         """Vectorised level-synchronous engine vs recursive reference.
@@ -586,6 +587,27 @@ def main() -> None:
         t = results["t_warm_s"] / results["nscenarios"]
         print(f"serve,{t*1e6:.0f},{serve.headline(results)}")
 
+    def faults_bench():
+        """Resilience under injected faults (ISSUE 7).
+
+        Replays the standard single-fault schedules (scorer compile
+        failure, device OOM, partition failure, slow stage + deadline,
+        eviction storm) through MappingService and asserts the
+        availability/quality oracles: zero surfaced errors, every
+        schedule served on its expected degradation-ladder rung,
+        degraded results bit-identical to the healthy path, and the
+        no-fault pass identical to the direct (fused) pipeline with
+        every breaker closed.  Oracles run at every size — there is no
+        perf floor here, availability IS the product.
+        """
+        if args.full:
+            faults.main()  # 2^14-scale scenarios
+            return
+        scale = (1 << 9) if args.smoke else (1 << 12)
+        results = faults.run(scale=scale, quiet=True)
+        print(f"faults,{results['t_faulted_s']*1e6:.0f},"
+              f"{faults.headline(results)}")
+
     def hier_bench():
         """Flat vs hierarchical (coarsen -> map -> refine) engine.
 
@@ -663,6 +685,7 @@ def main() -> None:
         "mapscore": mapscore_bench,
         "end2end": end2end_bench,
         "serve": serve_bench,
+        "faults": faults_bench,
         "hier": hier_bench,
         "table1_orderings": table1,
         "minighost": mini,

@@ -116,6 +116,8 @@ class MapperConfig:
     backend        : partitioner engine ("vectorized" or "recursive").
     partition_backend : partition device backend ("numpy" or "jax";
                      silent jax -> numpy fallback, resolved once).
+    fused          : "auto" engages the fused whole-pipeline program
+                     when backends allow; "off" forces the staged path.
     sweep          : rotation-sweep mode ("batched" = ~2 engine passes
                      for the whole sweep; "loop" = per-candidate oracle).
     score_backend  : candidate scoring engine ("numpy", "jax" or
@@ -139,6 +141,7 @@ class MapperConfig:
     longest_dim: bool = True
     backend: str = "vectorized"
     partition_backend: str = "numpy"
+    fused: str = "auto"
     sweep: str = "batched"
     score_backend: str = "numpy"
     hierarchy: str = "flat"

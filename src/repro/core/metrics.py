@@ -13,8 +13,12 @@ treatment of multicore nodes.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import warnings
 
 import numpy as np
+
+from repro import faults
 
 from .machine import Machine
 
@@ -231,6 +235,32 @@ _BACKEND_CHAIN = {
 _JAX_EVAL = False     # memoised import: False = untried, None = unavailable
 _PALLAS_EVAL = False  # likewise for the Pallas mapscore kernel
 
+# Import/initialisation failures that legitimately disable an
+# accelerator backend.  Anything else (a genuine bug, a runtime device
+# fault) must PROPAGATE — the serve layer's degradation ladder handles
+# those per-request instead of silently pinning the process to a slower
+# rung (ISSUE 7 satellite: the old guards were bare ``except
+# Exception``, which swallowed everything).
+_IMPORT_FAILURES = (ImportError, AttributeError, OSError, RuntimeError)
+
+# cause of each unavailable backend (repr), for the one-shot warning
+_FALLBACK_CAUSE: dict[str, str] = {}
+_WARNED: set = set()
+
+
+def _warn_fallback(requested: str, resolved: str) -> None:
+    """Once-per-process warning naming the rung that actually runs."""
+    key = (requested, resolved)
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    causes = "; ".join(
+        f"{n}: {_FALLBACK_CAUSE[n]}" for n in _BACKEND_CHAIN[requested]
+        if n in _FALLBACK_CAUSE) or "backend unavailable"
+    warnings.warn(
+        f"score backend {requested!r} unavailable, resolved to "
+        f"{resolved!r} ({causes})", RuntimeWarning, stacklevel=3)
+
 
 def _jax_evaluator():
     """The JAX scoring entry point, or None when jax cannot be imported
@@ -240,8 +270,9 @@ def _jax_evaluator():
         try:
             from . import metrics_jax
             _JAX_EVAL = metrics_jax.evaluate_candidates_jax
-        except Exception:  # pragma: no cover - jax baked into the image
+        except _IMPORT_FAILURES as e:  # pragma: no cover - jax in image
             _JAX_EVAL = None
+            _FALLBACK_CAUSE["jax"] = repr(e)
     return _JAX_EVAL
 
 
@@ -253,29 +284,63 @@ def _pallas_evaluator():
         try:
             from repro.kernels.mapscore import ops as mapscore_ops
             _PALLAS_EVAL = mapscore_ops.evaluate_candidates_pallas
-        except Exception:  # pragma: no cover - jax baked into the image
+        except _IMPORT_FAILURES as e:  # pragma: no cover - jax in image
             _PALLAS_EVAL = None
+            _FALLBACK_CAUSE["pallas"] = repr(e)
     return _PALLAS_EVAL
+
+
+def _hooked(name: str, fn):
+    """Wrap a resolved evaluator with its fault-injection site.
+
+    One wrapper per resolved backend (cached): every scoring call —
+    candidate search, hier refinement, direct ``evaluate_candidates`` —
+    passes through ``faults.fire("score.<resolved>")`` so injected
+    compile failures / device OOMs surface exactly where real ones
+    would.
+    """
+    cached = _HOOKED.get(name)
+    if cached is not None and cached.__wrapped__ is fn:
+        return cached
+    site = f"score.{name}"
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        faults.fire(site)
+        return fn(*args, **kwargs)
+
+    _HOOKED[name] = wrapper
+    return wrapper
+
+
+_HOOKED: dict = {}
 
 
 def get_evaluator(backend: str):
     """Resolve a scoring backend ONCE: ``(resolved_name, callable)``.
 
     The callable has :func:`evaluate_candidates`' signature minus
-    ``backend``.  Resolution walks the silent fallback chain
-    (pallas -> jax -> numpy), so hot loops — the hier swap refinement,
-    the candidate search — can hoist it out instead of re-resolving per
-    scoring call.  ``resolved_name`` is what actually runs (recorded by
-    ``benchmarks/run.py --json`` so trajectories stay attributable).
+    ``backend``.  Resolution walks the fallback chain
+    (pallas -> jax -> numpy) — warning once per process when a
+    requested backend is unavailable — so hot loops (the hier swap
+    refinement, the candidate search) can hoist it out instead of
+    re-resolving per scoring call.  ``resolved_name`` is what actually
+    runs (recorded by ``benchmarks/run.py --json`` so trajectories stay
+    attributable).  The callable fires the ``score.<resolved>``
+    fault-injection site (:mod:`repro.faults`) on every call.
     """
     if backend not in SCORE_BACKENDS:
         raise ValueError(f"unknown scoring backend {backend!r}")
     for name in _BACKEND_CHAIN[backend]:
         if name == "numpy":
-            return "numpy", evaluate_candidates_numpy
+            if backend != "numpy":
+                _warn_fallback(backend, "numpy")
+            return "numpy", _hooked("numpy", evaluate_candidates_numpy)
         fn = _pallas_evaluator() if name == "pallas" else _jax_evaluator()
         if fn is not None:
-            return name, fn
+            if name != backend:
+                _warn_fallback(backend, name)
+            return name, _hooked(name, fn)
     raise AssertionError("unreachable: numpy terminates every chain")
 
 

@@ -37,7 +37,11 @@ engine is the default because it removes the Python-per-part overhead
 
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
+
+from repro import faults
 
 SFC_KINDS = ("Z", "Gray", "FZ", "FZlow", "H")
 BACKENDS = ("vectorized", "recursive", "jax")
@@ -54,15 +58,37 @@ _PARTITION_CHAIN = {"numpy": ("numpy",), "jax": ("jax", "numpy")}
 # module object = ready
 _JAX_PART = False
 
+# Import/initialisation failures that legitimately disable the device
+# partition engine; runtime faults must propagate to the caller (the
+# serve layer's degradation ladder owns per-request recovery).  Mirrors
+# ``metrics._IMPORT_FAILURES``.
+_IMPORT_FAILURES = (ImportError, AttributeError, OSError, RuntimeError)
+
+_JAX_PART_CAUSE: str | None = None
+_WARNED_FALLBACK = False
+
+
+def _warn_partition_fallback() -> None:
+    """Once-per-process warning when "jax" resolves to the host engine."""
+    global _WARNED_FALLBACK
+    if _WARNED_FALLBACK:
+        return
+    _WARNED_FALLBACK = True
+    cause = _JAX_PART_CAUSE or "backend unavailable"
+    warnings.warn(
+        "partition backend 'jax' unavailable, resolved to the host "
+        f"vectorized engine ({cause})", RuntimeWarning, stacklevel=3)
+
 
 def _jax_partition_module():
-    global _JAX_PART
+    global _JAX_PART, _JAX_PART_CAUSE
     if _JAX_PART is False:
         try:
             from . import partition_jax
             _JAX_PART = partition_jax
-        except Exception:  # pragma: no cover - container always has jax
+        except _IMPORT_FAILURES as e:  # pragma: no cover - jax in image
             _JAX_PART = None
+            _JAX_PART_CAUSE = repr(e)
     return _JAX_PART
 
 
@@ -79,6 +105,8 @@ def resolve_partition_backend(backend: str) -> str:
                          f"options: {PARTITION_BACKENDS}")
     for name in _PARTITION_CHAIN[backend]:
         if name == "numpy" or _jax_partition_module() is not None:
+            if name != backend:
+                _warn_partition_fallback()
             return name
     return "numpy"  # pragma: no cover - chain always ends in numpy
 
@@ -154,10 +182,11 @@ def order_points(
     if backend == "jax":
         mod = _jax_partition_module()
         if mod is not None:
+            faults.fire("partition.jax")
             return mod.order_points_jax(
                 coords, nparts, sfc, weights=weights, dim_order=dim_order,
                 longest_dim=longest_dim, uneven_prime=uneven_prime)
-        # silent fallback: the vectorized engine is bit-identical
+        _warn_partition_fallback()  # vectorized engine is bit-identical
     from .partition import vectorized_order
     return vectorized_order(
         coords, nparts, sfc, weights=weights, dim_order=dim_order,
@@ -228,11 +257,12 @@ def order_points_batched(
     if backend == "jax":
         mod = _jax_partition_module()
         if mod is not None:
+            faults.fire("partition.jax")
             return mod.order_points_batched_jax(
                 coords, nparts, sfc, dim_orders=dim_orders,
                 weights=weights, longest_dim=longest_dim,
                 uneven_prime=uneven_prime)
-        # silent fallback: the vectorized engine is bit-identical
+        _warn_partition_fallback()  # vectorized engine is bit-identical
     from .partition import vectorized_order_batched
     return vectorized_order_batched(
         coords, nparts, sfc, dim_orders=dim_orders, weights=weights,

@@ -17,12 +17,14 @@ silently to the jax scorer (and from there to numpy).
 from __future__ import annotations
 
 import functools
+import warnings
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro import faults
 from repro.core.machine import Machine
 # bucketing + padding rules shared with the jax backend: the two
 # accelerator paths must agree on bucket boundaries or cache keys drift
@@ -62,6 +64,22 @@ def scorer_cache_stats() -> dict:
 
 def reset_scorer_cache() -> None:
     _compiled.cache_clear()
+
+
+_VMEM_WARNED: set = set()
+
+
+def _warn_vmem_fallback(machine: Machine) -> None:
+    """Once-per-machine-shape warning for the VMEM-budget jax fallback."""
+    key = (tuple(int(x) for x in machine.dims), machine.core_dims)
+    if key in _VMEM_WARNED:
+        return
+    _VMEM_WARNED.add(key)
+    warnings.warn(
+        f"mapscore link accumulators for machine dims {key[0]} exceed "
+        f"the VMEM budget ({vmem_accumulator_bytes(machine)} > "
+        f"{VMEM_ACC_BUDGET} bytes); scoring falls back to the jax "
+        "backend", RuntimeWarning, stacklevel=3)
 
 
 def vmem_accumulator_bytes(machine: Machine) -> int:
@@ -104,11 +122,14 @@ def evaluate_candidates_pallas(machine: Machine, task_edges: np.ndarray,
     if ne == 0 or nb == 0:
         return out
     if traffic and vmem_accumulator_bytes(machine) > VMEM_ACC_BUDGET:
-        # machine too large for on-chip link state: silent jax fallback
+        # machine too large for on-chip link state: jax fallback (warned
+        # once per process so the rung change is observable)
+        _warn_vmem_fallback(machine)
         from repro.core import metrics
         _, fn = metrics.get_evaluator("jax")
         return fn(machine, task_edges, edge_weights, coord_stack,
                   traffic=traffic, chunk_elems=chunk_elems)
+    faults.fire("kernel.mapscore")
     if interpret is None:
         interpret = not _on_tpu()
 

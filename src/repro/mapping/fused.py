@@ -34,6 +34,7 @@ import functools
 
 import numpy as np
 
+from repro import faults
 from repro.core import partition_jax as _pj  # noqa: F401  (enables x64)
 
 import jax.numpy as jnp  # noqa: E402
@@ -178,6 +179,7 @@ class FusedSweep:
 
     def run(self, graph, alloc, task_coords, proc_coords, cands,
             task_weights=None):
+        faults.fire("fused")
         pipe = self.pipe
         cfg = pipe.config
         tc = np.asarray(task_coords, dtype=np.float64)

@@ -62,6 +62,11 @@ class PipelineConfig:
                      score -> select chain fuses into ONE compiled
                      program per candidate stack
                      (:mod:`repro.mapping.fused`).
+      fused        : "auto" (default) engages the fused whole-pipeline
+                     program whenever the backends allow it; "off"
+                     forces the unfused staged path — the first rung of
+                     the serve layer's degradation ladder
+                     (:mod:`repro.serve.resilience`).
 
     Machine-transform stage:
       shift           : torus wrap-around shifting of machine coords.
@@ -111,6 +116,7 @@ class PipelineConfig:
     longest_dim: bool = True
     backend: str = "vectorized"
     partition_backend: str = "numpy"
+    fused: str = "auto"
     objective: str | tuple = "weighted_hops"
     sweep: str = "batched"
     score_backend: str = "numpy"
@@ -173,8 +179,8 @@ class MappingPipeline:
         # both stages resolved to device backends and the sweep is the
         # batched vectorized one (the fused gathers mirror it exactly)
         self._fused = None
-        if (self.order_backend == "jax" and cfg.sweep == "batched"
-                and cfg.sfc != "H"):
+        if (cfg.fused != "off" and self.order_backend == "jax"
+                and cfg.sweep == "batched" and cfg.sfc != "H"):
             from repro.core.metrics import get_evaluator
             resolved_score, _ = get_evaluator(cfg.score_backend)
             if resolved_score in ("jax", "pallas"):

@@ -9,6 +9,9 @@ Two serving stacks live here:
 - :mod:`repro.serve.scenarios` — the scenario registry: the full
   workload x allocation x hierarchy x objective cross-product that
   benchmarks, tests and the server draw problems from.
+- :mod:`repro.serve.resilience` — circuit breakers and the
+  graceful-degradation ladder the service walks on backend failures
+  (ISSUE 7; fault injection lives in :mod:`repro.faults`).
 - :mod:`repro.serve.decode` — the token-decode model server
   (:class:`ServeEngine`, prefill + greedy decode over a KV/SSM cache).
 """
@@ -16,6 +19,8 @@ Two serving stacks live here:
 from .cache import LRUCache
 from .engine import (OBJECTIVES, MappingRequest, MappingResponse,
                      MappingService, default_service, make_request)
+from .resilience import (CircuitBreaker, DeadlineExceeded,
+                         ServiceOverloaded, degradation_ladder, rung_key)
 from .scenarios import (ALLOCATIONS, HIERARCHIES, OBJECTIVE_KEYS,
                         WORKLOADS, Scenario, all_scenarios, get_scenario,
                         scenario_names)
@@ -30,8 +35,10 @@ def __getattr__(name):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
-    "ALLOCATIONS", "HIERARCHIES", "LRUCache", "MappingRequest",
-    "MappingResponse", "MappingService", "OBJECTIVES", "OBJECTIVE_KEYS",
-    "Scenario", "ServeEngine", "WORKLOADS", "all_scenarios",
-    "default_service", "get_scenario", "make_request", "scenario_names",
+    "ALLOCATIONS", "CircuitBreaker", "DeadlineExceeded", "HIERARCHIES",
+    "LRUCache", "MappingRequest", "MappingResponse", "MappingService",
+    "OBJECTIVES", "OBJECTIVE_KEYS", "Scenario", "ServeEngine",
+    "ServiceOverloaded", "WORKLOADS", "all_scenarios",
+    "default_service", "degradation_ladder", "get_scenario",
+    "make_request", "rung_key", "scenario_names",
 ]

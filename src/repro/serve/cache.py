@@ -31,6 +31,7 @@ class LRUCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.storms = 0
 
     def __len__(self) -> int:
         return len(self._data)
@@ -73,8 +74,19 @@ class LRUCache:
         with self._lock:
             self._data.clear()
 
+    def storm(self) -> None:
+        """An eviction storm: drop every entry, booking each as an
+        eviction.  This is the ``evict``-kind fault-injection callback
+        (:mod:`repro.faults`, site ``serve.cache``) — the service keeps
+        answering, every post-storm request recomputing cold."""
+        with self._lock:
+            self.evictions += len(self._data)
+            self.storms += 1
+            self._data.clear()
+
     def stats(self) -> dict:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions, "size": len(self._data),
+                    "evictions": self.evictions, "storms": self.storms,
+                    "size": len(self._data),
                     "capacity": self.capacity}

@@ -25,6 +25,17 @@ Response schema (see README "repro.serve"): ``result`` (the
 with the cache), ``signature``, ``status`` (cold/warm/coalesced) and
 ``latency_s``.
 
+The cold path is RESILIENT (ISSUE 7, :mod:`repro.serve.resilience`):
+a failed or deadline-exceeded pipeline pass walks the degradation
+ladder one rung down (fused -> unfused, pallas -> jax -> numpy scoring,
+jax -> numpy partitioning, refine rounds -> 0) instead of surfacing the
+error, per-rung circuit breakers skip known-bad backends outright, a
+bounded admission queue sheds overload, and the served rung lands in
+``MappingResult.stats["degraded"]`` plus the service counters
+(:meth:`MappingService.stats`).  Errors never enter the result LRU, and
+a failed in-flight computation is recomputed by its waiters rather than
+replayed to them.
+
 The token-decode model server that used to live here moved to
 :mod:`repro.serve.decode`; ``ServeEngine`` is re-exported below for
 compatibility.
@@ -38,9 +49,14 @@ import time
 
 import numpy as np
 
-from repro.core.signature import array_digest, mapping_signature
+from repro import faults
+from repro.core.signature import (array_digest, config_signature,
+                                  mapping_signature)
 from repro.mapping import PipelineConfig, shared_pipeline
 from repro.serve.cache import LRUCache
+from repro.serve.resilience import (BreakerBoard, DeadlineExceeded,
+                                    ServiceOverloaded, degradation_ladder,
+                                    rung_key)
 
 
 def __getattr__(name):
@@ -151,27 +167,189 @@ class _InFlight:
 
 
 class MappingService:
-    """The request server: canonicalise, coalesce, cache, compute.
+    """The request server: canonicalise, coalesce, cache, compute —
+    and degrade gracefully instead of failing (ISSUE 7).
 
-    capacity : bound of the result LRU (entries, not bytes — a result
-               is one int array per request).
+    capacity   : bound of the result LRU (entries, not bytes — a result
+                 is one int array per request).
+    deadline_s : optional per-request compute deadline.  A NON-terminal
+                 ladder rung that overruns the remaining budget is
+                 abandoned (its worker finishes off-thread) and the
+                 request drops a rung; the terminal host rung always
+                 runs to completion so a slow stage degrades latency
+                 class, never availability.
+    max_inflight / max_queue : bounded admission (None = unlimited,
+                 the default).  At most ``max_inflight`` cold
+                 computations run concurrently; up to ``max_queue``
+                 more block waiting; beyond that requests are SHED with
+                 :class:`ServiceOverloaded` (counted in ``stats()``).
+                 Warm hits and coalesced waiters are never queued.
+    breaker_threshold / breaker_cooldown_s : per-rung circuit breakers
+                 (:class:`repro.serve.resilience.CircuitBreaker`) keyed
+                 by RESOLVED backend combination; an open breaker skips
+                 its rung without paying the failure latency.
+    clock      : injectable monotonic clock for the breakers (tests).
     """
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256, *,
+                 deadline_s: float | None = None,
+                 max_inflight: int | None = None,
+                 max_queue: int = 8,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0,
+                 clock=time.monotonic):
         self.results = LRUCache(capacity)
+        self.deadline_s = deadline_s
+        self.max_inflight = max_inflight
+        self.max_queue = max_queue
         self._inflight: dict[str, _InFlight] = {}
         self._lock = threading.Lock()
         self._counts = {"cold": 0, "warm": 0, "coalesced": 0}
+        self._res_counts = {"degraded": 0, "shed": 0, "rung_failures": 0,
+                            "deadline_misses": 0, "deadline_skips": 0,
+                            "breaker_skips": 0}
+        self._rung_counts: dict[str, int] = {}
+        self._ladders: dict[str, list] = {}
+        self._breakers = BreakerBoard(breaker_threshold,
+                                      breaker_cooldown_s, clock)
+        self._adm = threading.Condition(threading.Lock())
+        self._active = 0
+        self._queued = 0
 
     # -- the miss path ---------------------------------------------------
 
     def _compute(self, request: MappingRequest):
         """Run the pipeline for a cache miss (test seam: override to
-        instrument/block the cold path)."""
+        instrument/block the cold path).  Every ladder rung routes
+        through here, so overrides see degraded configs too."""
+        faults.fire("serve.compute")
         pipe = shared_pipeline(request.config)
         return pipe.map(request.graph, request.alloc,
                         task_coords=request.task_coords,
                         task_weights=request.task_weights)
+
+    def _ladder_for(self, config: PipelineConfig) -> list:
+        """The config's ``(rung_name, config, breaker_key)`` ladder,
+        built once per config signature (backend resolution is not paid
+        per request)."""
+        key = config_signature(config)
+        with self._lock:
+            ladder = self._ladders.get(key)
+        if ladder is None:
+            ladder = [(name, cfg, rung_key(cfg))
+                      for name, cfg in degradation_ladder(config)]
+            with self._lock:
+                ladder = self._ladders.setdefault(key, ladder)
+        return ladder
+
+    def _call_rung(self, request: MappingRequest,
+                   budget_s: float | None):
+        """One `_compute` attempt, bounded by ``budget_s`` when set.
+
+        The deadline run executes on a daemon worker so an overrun can
+        be abandoned; the worker's eventual result is discarded (the
+        ladder has already moved on).
+        """
+        if budget_s is None:
+            return self._compute(request)
+        box: dict = {}
+
+        def worker():
+            try:
+                box["result"] = self._compute(request)
+            except BaseException as e:
+                box["error"] = e
+
+        th = threading.Thread(target=worker, daemon=True,
+                              name="mapping-rung")
+        th.start()
+        th.join(budget_s)
+        if th.is_alive():
+            raise DeadlineExceeded(
+                f"rung exceeded remaining deadline ({budget_s:.3f}s)")
+        if "error" in box:
+            raise box["error"]
+        return box["result"]
+
+    def _execute(self, request: MappingRequest, t0: float):
+        """Walk the degradation ladder until a rung serves the request.
+
+        Rung failures trip the rung's breaker and drop one rung; open
+        breakers and an exhausted deadline budget skip rungs outright.
+        The terminal rung runs unconditionally (no breaker gate, no
+        deadline) — availability beats latency at the floor.  Only a
+        terminal-rung failure propagates to the caller.
+        """
+        ladder = self._ladder_for(request.config)
+        last_err = None
+        for i, (name, cfg, key) in enumerate(ladder):
+            breaker = self._breakers.get(key)
+            terminal = i == len(ladder) - 1
+            if not terminal and not breaker.allow():
+                self._bump("breaker_skips")
+                continue
+            budget = None
+            if self.deadline_s is not None and not terminal:
+                budget = self.deadline_s - (time.perf_counter() - t0)
+                if budget <= 0:
+                    self._bump("deadline_skips")
+                    continue
+            req = request if i == 0 else dataclasses.replace(
+                request, config=cfg, _signature=None)
+            try:
+                result = self._call_rung(req, budget)
+            except Exception as e:
+                last_err = e
+                breaker.record_failure()
+                self._bump("rung_failures")
+                if isinstance(e, DeadlineExceeded):
+                    self._bump("deadline_misses")
+                if terminal:
+                    raise
+                continue
+            breaker.record_success()
+            if i > 0:
+                result.stats["degraded"] = name
+                self._bump("degraded")
+                with self._lock:
+                    self._rung_counts[name] = \
+                        self._rung_counts.get(name, 0) + 1
+            return result
+        raise last_err if last_err is not None else RuntimeError(
+            "degradation ladder exhausted")  # pragma: no cover
+
+    # -- bounded admission ------------------------------------------------
+
+    def _admit(self) -> None:
+        if self.max_inflight is None:
+            return
+        with self._adm:
+            if self._active < self.max_inflight:
+                self._active += 1
+                return
+            if self._queued >= self.max_queue:
+                self._bump("shed")
+                raise ServiceOverloaded(
+                    f"admission queue full ({self._active} active, "
+                    f"{self._queued} queued)")
+            self._queued += 1
+            try:
+                while self._active >= self.max_inflight:
+                    self._adm.wait()
+            finally:
+                self._queued -= 1
+            self._active += 1
+
+    def _release(self) -> None:
+        if self.max_inflight is None:
+            return
+        with self._adm:
+            self._active -= 1
+            self._adm.notify()
+
+    def _bump(self, key: str) -> None:
+        with self._lock:
+            self._res_counts[key] += 1
 
     # -- public API ------------------------------------------------------
 
@@ -179,40 +357,51 @@ class MappingService:
         """Serve one request (thread-safe).
 
         Warm path: signature + one LRU lookup.  Concurrent duplicates
-        of an uncached signature share one `_compute` pass; exactly one
-        caller is the owner, the rest block until it publishes.
+        of an uncached signature share one compute pass; exactly one
+        caller is the owner, the rest block until it publishes.  A
+        FAILED flight is never replayed to its waiters: each waiter
+        retries the full lookup once (recomputing if it becomes the new
+        owner) so a transient fault poisons nothing — only a repeated
+        failure propagates.
         """
         t0 = time.perf_counter()
+        faults.fire("serve.cache", on_evict=self.results.storm)
         sig = request.signature()
-        result = self.results.get(sig)
-        if result is not None:
-            return self._respond(result, sig, "warm", t0)
-
-        with self._lock:
-            # recheck under the lock: the owner may have published
-            # between the miss above and here (uncounted — one logical
-            # lookup must not book two misses)
-            result = self.results.get(sig, count=False)
+        waited = False
+        while True:
+            result = self.results.get(sig, count=not waited)
             if result is not None:
                 return self._respond(result, sig, "warm", t0)
-            entry = self._inflight.get(sig)
-            owner = entry is None
+            with self._lock:
+                # recheck under the lock: the owner may have published
+                # between the miss above and here (uncounted — one
+                # logical lookup must not book two misses)
+                result = self.results.get(sig, count=False)
+                if result is not None:
+                    return self._respond(result, sig, "warm", t0)
+                entry = self._inflight.get(sig)
+                owner = entry is None
+                if owner:
+                    entry = self._inflight[sig] = _InFlight()
             if owner:
-                entry = self._inflight[sig] = _InFlight()
-
-        if not owner:
+                break
             entry.event.wait()
-            if entry.error is not None:
-                raise entry.error
-            if entry.result is None:
-                # the owner died without publishing (e.g. a
-                # KeyboardInterrupt that unwound past its except)
+            if entry.result is not None:
+                return self._respond(entry.result, sig, "coalesced", t0)
+            # the flight failed (or aborted) without publishing
+            if waited:
+                if entry.error is not None:
+                    raise entry.error
                 raise RuntimeError(
                     "in-flight mapping computation was aborted")
-            return self._respond(entry.result, sig, "coalesced", t0)
+            waited = True  # retry once: recompute, don't replay errors
 
         try:
-            entry.result = self._compute(request)
+            self._admit()
+            try:
+                entry.result = self._execute(request, t0)
+            finally:
+                self._release()
             self.results.put(sig, entry.result)
         except BaseException as e:  # record aborts for waiters too
             entry.error = e
@@ -257,12 +446,28 @@ class MappingService:
         return out
 
     def stats(self) -> dict:
-        """Cumulative service counters + the result-cache stats."""
+        """Cumulative service counters + the result-cache stats.
+
+        Beyond the PR 5 counters (``cold``/``warm``/``coalesced``/
+        ``requests``/``inflight``/``cache``): ``degraded`` (requests
+        served below their full rung) with the per-rung breakdown in
+        ``rungs``, ``rung_failures`` (individual rung attempts that
+        failed), ``deadline_misses`` (rungs abandoned at the deadline),
+        ``deadline_skips`` (rungs never tried — budget already gone),
+        ``breaker_skips`` (rungs skipped on an open breaker), ``shed``
+        (requests refused by admission control), and ``breakers`` (the
+        per-rung-key breaker states).
+        """
         with self._lock:
             counts = dict(self._counts)
-        return {**counts,
-                "requests": sum(counts.values()),
+            res = dict(self._res_counts)
+            rungs = dict(self._rung_counts)
+        return {**counts, **res,
+                "requests": (counts["cold"] + counts["warm"]
+                             + counts["coalesced"]),
                 "inflight": len(self._inflight),
+                "rungs": rungs,
+                "breakers": self._breakers.states(),
                 "cache": self.results.stats()}
 
     def _respond(self, result, sig, status, t0) -> MappingResponse:

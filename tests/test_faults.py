@@ -1,0 +1,510 @@
+"""Resilience tests (ISSUE 7): the fault-injection registry, circuit
+breakers, the degradation ladder, and MappingService's fault handling —
+a pallas/jax backend raising mid-request degrades one rung down with
+winners bit-identical to the numpy oracle, deadlines drop slow rungs,
+overload sheds, failed flights never poison the cache or their waiters.
+
+Every test that asserts exact fire/failure counts runs inside
+``faults.isolated()`` so the CI chaos job's ambient ``REPRO_FAULTS``
+schedule cannot perturb it.
+"""
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.mapping import PipelineConfig, shared_pipeline
+from repro.serve import (MappingService, ServiceOverloaded, get_scenario,
+                         degradation_ladder, rung_key)
+from repro.serve.resilience import BreakerBoard, CircuitBreaker
+
+SCALE = 256
+
+BASE = "minighost-xk7_sparse-flat-wh"
+
+
+def _scenario(name=BASE, seed=0, scale=SCALE):
+    return get_scenario(name, scale=scale, seed=seed)
+
+
+def _req(name=BASE, seed=0, scale=SCALE, **overrides):
+    sc = _scenario(name, seed=seed, scale=scale)
+    req = sc.request()
+    if overrides:
+        cfg = dataclasses.replace(sc.config(), **overrides)
+        req = dataclasses.replace(req, config=cfg, _signature=None)
+    return req
+
+
+def _has_jax():
+    from repro.core.orderings import resolve_partition_backend
+    return resolve_partition_backend("jax") == "jax"
+
+
+# ---------------------------------------------------------------------------
+# The fault registry
+# ---------------------------------------------------------------------------
+
+def test_parse_schedule():
+    rows = faults.parse_schedule(
+        "score.jax:error:count=1, partition.*:slow:delay=0.25:after=2,"
+        "serve.cache:evict:prob=0.5:seed=7")
+    assert rows[0] == ("score.jax", "error", {"count": 1})
+    assert rows[1] == ("partition.*", "slow", {"delay": 0.25, "after": 2})
+    assert rows[2] == ("serve.cache", "evict", {"prob": 0.5, "seed": 7})
+    assert faults.parse_schedule("") == []
+
+
+def test_parse_schedule_rejects_garbage():
+    with pytest.raises(ValueError):
+        faults.parse_schedule("score.jax")  # no kind
+    with pytest.raises(ValueError):
+        faults.parse_schedule("a.b:error:count")  # option without =
+    with pytest.raises(ValueError):
+        faults.parse_schedule("a.b:error:frobnicate=1")
+    with pytest.raises(ValueError):
+        faults.install("a.b", "explode")  # unknown kind
+
+
+def test_fire_kinds_raise_typed_exceptions():
+    with faults.isolated():
+        with faults.injected("x.compile", "compile"):
+            with pytest.raises(faults.InjectedCompileError):
+                faults.fire("x.compile")
+        with faults.injected("x.oom", "oom"):
+            with pytest.raises(faults.InjectedDeviceOOM) as ei:
+                faults.fire("x.oom")
+            assert "RESOURCE_EXHAUSTED" in str(ei.value)
+        with faults.injected("x.err", "error"):
+            with pytest.raises(faults.InjectedFault):
+                faults.fire("x.err")
+        # all injected kinds share one catchable base
+        assert issubclass(faults.InjectedCompileError, faults.InjectedFault)
+        assert issubclass(faults.InjectedDeviceOOM, faults.InjectedFault)
+
+
+def test_count_and_after_windows():
+    with faults.isolated():
+        with faults.injected("s", "error", count=1, after=1) as spec:
+            faults.fire("s")  # skipped by after=1
+            with pytest.raises(faults.InjectedFault):
+                faults.fire("s")
+            faults.fire("s")  # count exhausted: dormant again
+            assert (spec.calls, spec.fired) == (3, 1)
+
+
+def test_site_patterns_match_fnmatch():
+    with faults.isolated():
+        with faults.injected("score.*", "error") as spec:
+            with pytest.raises(faults.InjectedFault):
+                faults.fire("score.pallas")
+            faults.fire("partition.jax")  # no match
+            assert spec.fired == 1
+
+
+def test_seeded_probability_is_deterministic():
+    def pattern():
+        fired = []
+        with faults.isolated(), \
+                faults.injected("p", "error", prob=0.4, seed=123):
+            for _ in range(32):
+                try:
+                    faults.fire("p")
+                    fired.append(0)
+                except faults.InjectedFault:
+                    fired.append(1)
+        return fired
+
+    a, b = pattern(), pattern()
+    assert a == b                      # replayable under the same seed
+    assert 0 < sum(a) < 32             # actually probabilistic
+
+
+def test_env_reload_and_isolated():
+    with faults.isolated():
+        specs = faults.reload_env("a.b:error:count=2,c.d:slow:delay=0.01")
+        assert len(specs) == 2 and faults.active()
+        with faults.isolated():
+            # inner isolation suspends even programmatic specs
+            faults.fire("a.b")
+            assert not faults.active()
+        with pytest.raises(faults.InjectedFault):
+            faults.fire("a.b")
+        for s in specs:
+            faults.remove(s)
+        assert not faults.active()
+
+
+def test_evict_kind_invokes_callback_only():
+    with faults.isolated():
+        hits = []
+        with faults.injected("cache", "evict"):
+            faults.fire("cache", on_evict=lambda: hits.append(1))
+            faults.fire("cache")  # no callback passed: harmless no-op
+        assert hits == [1]
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_breaker_state_machine():
+    clk = _Clock()
+    br = CircuitBreaker(threshold=2, cooldown_s=10.0, clock=clk)
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    assert br.state == "closed"        # below threshold
+    br.record_failure()
+    assert br.state == "open" and br.opens == 1
+    assert not br.allow()              # open: requests refused
+    clk.t = 10.0
+    assert br.state == "half_open"
+    assert br.allow()                  # the single probe
+    assert not br.allow()              # second prober refused
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+
+
+def test_breaker_failed_probe_reopens():
+    clk = _Clock()
+    br = CircuitBreaker(threshold=1, cooldown_s=5.0, clock=clk)
+    br.record_failure()
+    assert br.state == "open"
+    clk.t = 5.0
+    assert br.allow()                  # probe
+    br.record_failure()                # probe failed
+    assert br.state == "open" and br.opens == 2
+    clk.t = 9.9
+    assert not br.allow()              # new cooldown window
+
+
+def test_breaker_success_resets_consecutive_failures():
+    br = CircuitBreaker(threshold=2, cooldown_s=1.0)
+    br.record_failure()
+    br.record_success()
+    br.record_failure()
+    assert br.state == "closed"        # never two CONSECUTIVE failures
+    assert br.failures == 2            # cumulative counter still counts
+
+
+def test_breaker_board_shares_per_key():
+    board = BreakerBoard(threshold=1, cooldown_s=1.0)
+    assert board.get("k") is board.get("k")
+    assert board.get("k") is not board.get("other")
+    board.get("k").record_failure()
+    assert board.states()["k"]["state"] == "open"
+    assert board.states()["other"]["state"] == "closed"
+
+
+# ---------------------------------------------------------------------------
+# The degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_ladder_host_config_is_single_rung():
+    lad = degradation_ladder(PipelineConfig())
+    assert [n for n, _ in lad] == ["full"]
+
+
+def test_ladder_full_accelerator_config():
+    if not _has_jax():
+        pytest.skip("jax unavailable")
+    cfg = PipelineConfig(score_backend="pallas", partition_backend="jax",
+                        rotations=4, hierarchy="node")
+    names = [n for n, _ in degradation_ladder(cfg)]
+    assert names == ["full", "unfused", "score_jax", "score_numpy",
+                     "partition_numpy", "refine_0"]
+    # cumulative: the terminal rung is all-host with zero refine rounds
+    last = degradation_ladder(cfg)[-1][1]
+    assert (last.score_backend, last.partition_backend,
+            last.fused, last.refine_rounds) == ("numpy", "numpy", "off", 0)
+    # the first rung is the caller's config, untouched
+    assert degradation_ladder(cfg)[0][1] is cfg
+
+
+def test_ladder_jax_score_only():
+    names = [n for n, _ in
+             degradation_ladder(PipelineConfig(score_backend="jax"))]
+    if _has_jax():
+        assert names == ["full", "score_numpy"]
+    else:
+        assert names == ["full"]  # resolves to numpy: nothing to shed
+
+
+def test_rung_key_tracks_resolved_backends():
+    k = rung_key(PipelineConfig())
+    assert "score=numpy" in k and "partition=numpy" in k
+    if _has_jax():
+        kj = rung_key(PipelineConfig(score_backend="jax",
+                                     partition_backend="jax"))
+        assert kj.startswith("fused/") and "score=jax" in kj
+
+
+# ---------------------------------------------------------------------------
+# Service-level degradation (the satellite's oracle tests)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not _has_jax(), reason="jax unavailable")
+def test_pallas_fault_degrades_to_jax_bit_identical():
+    """Pallas scorer raising mid-request -> jax rung, winners
+    bit-identical to the numpy oracle."""
+    with faults.isolated():
+        svc = MappingService()
+        req = _req(score_backend="pallas", partition_backend="numpy",
+                   rotations=4)
+        with faults.injected("score.pallas", "error", count=1) as spec:
+            resp = svc.map(req)
+            assert spec.fired == 1
+        assert resp.status == "cold"
+        assert resp.result.stats["degraded"] == "score_jax"
+
+        oracle = shared_pipeline(
+            dataclasses.replace(req.config, score_backend="numpy")
+        ).map(req.graph, req.alloc)
+        np.testing.assert_array_equal(resp.result.task_to_proc,
+                                      oracle.task_to_proc)
+        s = svc.stats()
+        assert s["degraded"] == 1 and s["rungs"] == {"score_jax": 1}
+        assert s["rung_failures"] == 1
+
+
+@pytest.mark.skipif(not _has_jax(), reason="jax unavailable")
+def test_jax_partition_fault_degrades_to_numpy_bit_identical():
+    """Device partition backend raising -> host engine rung,
+    bit-identical to the numpy oracle."""
+    with faults.isolated():
+        svc = MappingService()
+        req = _req(score_backend="numpy", partition_backend="jax",
+                   rotations=4)
+        with faults.injected("partition.jax", "error", count=1) as spec:
+            resp = svc.map(req)
+            assert spec.fired == 1
+        assert resp.result.stats["degraded"] == "partition_numpy"
+
+        oracle = shared_pipeline(
+            dataclasses.replace(req.config, partition_backend="numpy")
+        ).map(req.graph, req.alloc)
+        np.testing.assert_array_equal(resp.result.task_to_proc,
+                                      oracle.task_to_proc)
+
+
+@pytest.mark.skipif(not _has_jax(), reason="jax unavailable")
+def test_device_oom_degrades_and_result_is_valid():
+    with faults.isolated():
+        svc = MappingService()
+        req = _req(score_backend="jax", rotations=4)
+        with faults.injected("score.jax", "oom", count=1):
+            resp = svc.map(req)
+        assert resp.result.stats["degraded"] == "score_numpy"
+        t2p = resp.result.task_to_proc
+        assert np.array_equal(np.sort(t2p), np.arange(len(t2p)))  # bijection
+
+
+@pytest.mark.skipif(not _has_jax(), reason="jax unavailable")
+def test_fused_fault_degrades_to_unfused_bit_identical():
+    with faults.isolated():
+        svc = MappingService()
+        req = _req(score_backend="jax", partition_backend="jax",
+                   rotations=4)
+        with faults.injected("fused", "compile", count=1):
+            resp = svc.map(req)
+        assert resp.result.stats["degraded"] == "unfused"
+        oracle = shared_pipeline(
+            dataclasses.replace(req.config, fused="off")
+        ).map(req.graph, req.alloc)
+        np.testing.assert_array_equal(resp.result.task_to_proc,
+                                      oracle.task_to_proc)
+
+
+@pytest.mark.skipif(not _has_jax(), reason="jax unavailable")
+def test_slow_stage_with_deadline_degrades():
+    with faults.isolated():
+        svc = MappingService(deadline_s=0.15)
+        req = _req(score_backend="jax", rotations=4)
+        # the first rung hangs well past the deadline; the numpy rung
+        # then serves the request
+        with faults.injected("serve.compute", "slow", delay=5.0, count=1):
+            resp = svc.map(req)
+        assert resp.result.stats["degraded"] == "score_numpy"
+        s = svc.stats()
+        assert s["deadline_misses"] == 1
+        assert s["degraded"] == 1
+
+
+@pytest.mark.skipif(not _has_jax(), reason="jax unavailable")
+def test_breaker_opens_skips_and_recovers():
+    with faults.isolated():
+        clk = _Clock()
+        svc = MappingService(breaker_threshold=2, breaker_cooldown_s=30.0,
+                             clock=clk)
+        spec = faults.install("score.jax", "error")
+        try:
+            for seed in (0, 1):  # two failures trip the rung's breaker
+                resp = svc.map(_req(seed=seed, score_backend="jax",
+                                    rotations=4))
+                assert resp.result.stats["degraded"] == "score_numpy"
+            fired_before = spec.fired
+            resp = svc.map(_req(seed=2, score_backend="jax", rotations=4))
+            assert resp.result.stats["degraded"] == "score_numpy"
+            assert spec.fired == fired_before  # rung skipped, not tried
+            s = svc.stats()
+            assert s["breaker_skips"] >= 1
+            [open_key] = [k for k, v in s["breakers"].items()
+                          if v["state"] == "open"]
+            assert "score=jax" in open_key
+        finally:
+            faults.remove(spec)
+        # cooldown elapses, fault gone: the probe closes the breaker
+        clk.t = 30.0
+        resp = svc.map(_req(seed=3, score_backend="jax", rotations=4))
+        assert "degraded" not in resp.result.stats
+        assert all(v["state"] == "closed"
+                   for v in svc.stats()["breakers"].values())
+
+
+def test_admission_shedding_and_queueing():
+    with faults.isolated():
+        gate = threading.Event()
+        entered = threading.Event()
+
+        class Blocking(MappingService):
+            def _compute(self, request):
+                entered.set()
+                gate.wait()
+                return super()._compute(request)
+
+        svc = Blocking(max_inflight=1, max_queue=0)
+        errs = []
+
+        def owner():
+            try:
+                svc.map(_req(seed=10))
+            except BaseException as e:  # pragma: no cover
+                errs.append(e)
+
+        t = threading.Thread(target=owner)
+        t.start()
+        assert entered.wait(5.0)
+        with pytest.raises(ServiceOverloaded):
+            svc.map(_req(seed=11))  # queue full: shed
+        gate.set()
+        t.join(10.0)
+        assert not errs
+        assert svc.stats()["shed"] == 1
+        # warm hits bypass admission entirely
+        assert svc.map(_req(seed=10)).status == "warm"
+
+
+def test_failed_compute_not_cached_and_recomputable():
+    """Satellite: an error must evict the in-flight entry — a later
+    identical request recomputes instead of replaying the error, and
+    errors never enter the LRU."""
+    with faults.isolated():
+        svc = MappingService()
+        req = _req(seed=20)
+        with faults.injected("serve.compute", "error", count=1):
+            with pytest.raises(faults.InjectedFault):
+                svc.map(req)
+        assert len(svc.results) == 0       # errors never enter the LRU
+        assert svc.stats()["inflight"] == 0
+        resp = svc.map(_req(seed=20))      # fresh identical request
+        assert resp.status == "cold"
+        assert len(svc.results) == 1
+
+
+def test_waiter_recomputes_after_owner_failure():
+    with faults.isolated():
+        release = threading.Event()
+        entered = threading.Event()
+        calls = []
+
+        class FlakyOnce(MappingService):
+            def _compute(self, request):
+                calls.append(1)
+                if len(calls) == 1:
+                    entered.set()
+                    release.wait(5.0)
+                    raise RuntimeError("transient backend failure")
+                return super()._compute(request)
+
+        svc = FlakyOnce()
+        req = _req(seed=21)
+        outcomes = {}
+
+        def run(tag):
+            try:
+                outcomes[tag] = svc.map(_req(seed=21))
+            except RuntimeError as e:
+                outcomes[tag] = e
+
+        t1 = threading.Thread(target=run, args=("owner",))
+        t1.start()
+        assert entered.wait(5.0)
+        t2 = threading.Thread(target=run, args=("waiter",))
+        t2.start()
+        time.sleep(0.1)  # let the waiter reach the in-flight wait
+        release.set()
+        t1.join(10.0)
+        t2.join(10.0)
+        assert isinstance(outcomes["owner"], RuntimeError)
+        # the waiter did NOT replay the owner's error: it recomputed
+        assert outcomes["waiter"].result is not None
+        np.testing.assert_array_equal(
+            outcomes["waiter"].result.task_to_proc,
+            svc.map(req).result.task_to_proc)
+        assert len(calls) == 2
+
+
+def test_eviction_storm_recomputes_but_serves():
+    with faults.isolated():
+        svc = MappingService()
+        req = _req(seed=22)
+        first = svc.map(req)
+        with faults.injected("serve.cache", "evict", count=1):
+            resp = svc.map(_req(seed=22))
+        assert resp.status == "cold"       # storm wiped the warm entry
+        np.testing.assert_array_equal(resp.result.task_to_proc,
+                                      first.result.task_to_proc)
+        assert svc.results.stats()["storms"] == 1
+        assert svc.map(_req(seed=22)).status == "warm"  # storm over
+
+
+def test_no_faults_bit_identical_and_breakers_closed():
+    """Acceptance: with nothing injected the service returns exactly
+    the pipeline's (PR 6 fused, where eligible) result and no breaker
+    ever opens."""
+    with faults.isolated():
+        kwargs = (dict(score_backend="jax", partition_backend="jax")
+                  if _has_jax() else {})
+        svc = MappingService()
+        req = _req(rotations=4, **kwargs)
+        resp = svc.map(req)
+        direct = shared_pipeline(req.config).map(req.graph, req.alloc)
+        np.testing.assert_array_equal(resp.result.task_to_proc,
+                                      direct.task_to_proc)
+        if _has_jax():
+            assert resp.result.stats.get("fused") is True
+        s = svc.stats()
+        assert "degraded" not in resp.result.stats
+        assert s["degraded"] == 0 and s["rung_failures"] == 0
+        assert all(v["state"] == "closed" and v["opens"] == 0
+                   for v in s["breakers"].values())
+
+
+def test_stats_requests_counts_only_request_statuses():
+    svc = MappingService()
+    svc.map(_req(seed=23))
+    svc.map(_req(seed=23))
+    s = svc.stats()
+    assert s["requests"] == 2 == s["cold"] + s["warm"] + s["coalesced"]
