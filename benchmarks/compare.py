@@ -23,6 +23,10 @@ classes:
                 must stay >= ``frac`` x baseline — a loose floor that
                 catches real regressions (a batched path silently
                 falling back to a loop) while tolerating runner noise.
+- ``max_value``: absolute ceilings (lower is better), checked against
+                the POLICY bound itself rather than the baseline — the
+                overhead oracle: the traced end-to-end cold path must
+                stay within 2% of the untraced one (ISSUE 8).
 
 Timing fields (``us_per_call``, ``*_us``) are never compared — wall
 clocks differ per host; the ratios already normalise them.
@@ -46,7 +50,8 @@ POLICY = {
                    "min_ratio": {"speedup": 0.5}},
     "mapscore": {"exact": ["winner_identical"]},
     "end2end": {"exact": ["winner_identical"],
-                "min_ratio": {"speedup": 0.5}},
+                "min_ratio": {"speedup": 0.5},
+                "max_value": {"trace_overhead": 1.02}},
     "serve": {"exact": ["coalesced_identical", "warm_identical"],
               "min_ratio": {"warm_speedup": 0.5}},
     "faults": {"exact": ["failed", "degraded_all", "bijection_ok",
@@ -138,6 +143,15 @@ def compare(current: dict, baseline: dict) -> list[str]:
                 problems.append(
                     f"{name}: {key} regressed below {frac:.0%} of "
                     f"baseline: {b:.3g} -> {c:.3g}")
+        for key, ceiling in policy.get("max_value", {}).items():
+            if key not in cd:
+                problems.append(f"{name}: bounded field {key!r} missing")
+                continue
+            c = float(cd[key])
+            if c > ceiling:
+                problems.append(
+                    f"{name}: {key} {c:.4g} exceeds the {ceiling:g} "
+                    f"ceiling")
     return problems
 
 

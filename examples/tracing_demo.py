@@ -1,0 +1,84 @@
+"""Tracing demo: one degraded service request, rendered as a span tree.
+
+Walks the README "Observability" section live:
+
+1. serves a request whose jax scorer is rigged to fail, so the
+   degradation ladder walks two rungs — the whole walk lands in ONE
+   trace (every rung attempted, every pipeline stage, every backend
+   call site, the failure annotated where it happened);
+2. prints that trace as an indented span tree with durations;
+3. prints the process-wide telemetry snapshot's derived rates and the
+   Prometheus rendering of the compile-cache families;
+4. shows where the exporters hook in (``REPRO_TRACE=path`` JSONL,
+   ``obs.write_chrome_trace`` for Perfetto).
+
+Run:  PYTHONPATH=src python examples/tracing_demo.py
+"""
+
+import dataclasses
+
+from repro import faults, obs
+from repro.serve import MappingService, get_scenario
+
+BASE = "minighost-xk7_sparse-flat-wh"
+SCALE = 2048
+
+
+def _has_jax():
+    from repro.core.orderings import resolve_partition_backend
+    return resolve_partition_backend("jax") == "jax"
+
+
+def _request(seed=0, **overrides):
+    scen = get_scenario(BASE, scale=SCALE, seed=seed)
+    req = scen.request()
+    if overrides:
+        cfg = dataclasses.replace(scen.config(), **overrides)
+        req = dataclasses.replace(req, config=cfg, _signature=None)
+    return req
+
+
+def main():
+    jax = _has_jax()
+    overrides = dict(score_backend="jax", rotations=4) if jax \
+        else dict(rotations=4)
+
+    print("== a degraded request, as one trace ==")
+    with faults.isolated():
+        svc = MappingService()
+        req = _request(**overrides)
+        if jax:
+            with faults.injected("score.jax", "error", count=1):
+                resp = svc.map(req)
+            print(f"served on rung {resp.result.stats['degraded']!r} "
+                  f"(status={resp.status}, trace={resp.trace_id})\n")
+        else:
+            resp = svc.map(req)
+            print("(jax unavailable: single-rung ladder, healthy path)"
+                  f" trace={resp.trace_id}\n")
+        print(obs.format_tree(obs.finished(resp.trace_id)))
+
+        print("\n== warm replay: a new trace, no pipeline spans ==")
+        warm = svc.map(_request(**overrides))
+        print(f"status={warm.status}, trace={warm.trace_id}, computed "
+              f"under {warm.result.stats['trace_id']}")
+        print(obs.format_tree(obs.finished(warm.trace_id)))
+
+    print("\n== one snapshot: derived rates ==")
+    snap = obs.snapshot()
+    for key, val in sorted(snap["derived"].items()):
+        print(f"  {key:24s} "
+              f"{'n/a' if val is None else format(val, '.3f')}")
+
+    print("\n== Prometheus exposition (compile-cache families) ==")
+    for line in obs.prometheus_text(snap).splitlines():
+        if "compile_cache" in line:
+            print(f"  {line}")
+
+    print("\nExporters: set REPRO_TRACE=trace.jsonl for a process-wide"
+          "\nJSONL span log, or obs.write_chrome_trace('trace.json')"
+          "\nfor a Perfetto-loadable flame view (ui.perfetto.dev).")
+
+
+if __name__ == "__main__":
+    main()

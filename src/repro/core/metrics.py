@@ -18,7 +18,7 @@ import warnings
 
 import numpy as np
 
-from repro import faults
+from repro import faults, obs
 
 from .machine import Machine
 
@@ -306,8 +306,14 @@ def _hooked(name: str, fn):
 
     @functools.wraps(fn)
     def wrapper(*args, **kwargs):
-        faults.fire(site)
-        return fn(*args, **kwargs)
+        # the span wraps the fire too: an injected backend fault shows
+        # up in the trace exactly like a real one (error-annotated span)
+        with obs.span(site) as sp:
+            faults.fire(site)
+            out = fn(*args, **kwargs)
+            if len(args) >= 4:  # (machine, edges, weights, coord_stack)
+                sp.annotate(candidates=int(len(args[3])))
+            return out
 
     _HOOKED[name] = wrapper
     return wrapper

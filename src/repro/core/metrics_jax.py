@@ -36,6 +36,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from .machine import Machine
 
 MSG_BUCKET_MIN = 128  # smallest padded message-count bucket
@@ -158,18 +160,12 @@ def _scorer(dims, wrap, core_dims, traffic, ne_bucket, nb_bucket):
                                      core_dims=core_dims, traffic=traffic))
 
 
-def scorer_cache_stats() -> dict:
-    """Compile-cache counters of the bucketed jax scorer: ``misses`` is
-    the number of distinct (machine, bucket) programs compiled this
-    process, ``hits`` the number of calls that reused one."""
-    info = _scorer.cache_info()
-    return {"hits": int(info.hits), "misses": int(info.misses),
-            "entries": int(info.currsize)}
-
-
-def reset_scorer_cache() -> None:
-    """Drop the compiled scorers and zero the hit/miss counters."""
-    _scorer.cache_clear()
+# registry-backed stat/reset pair (repro.obs): ``misses`` is the number
+# of distinct (machine, bucket) programs compiled this process, ``hits``
+# the number of calls that reused one; auto-registers with
+# ``obs.snapshot()`` under "scorer_jax"
+scorer_cache_stats, reset_scorer_cache = obs.instrument_compile_cache(
+    "scorer_jax", _scorer)
 
 
 def pad_axis(arr, size, axis=0):
@@ -239,7 +235,10 @@ def evaluate_candidates_jax(machine: Machine, task_edges: np.ndarray,
         cs = pad_axis(coord_stack[c0:c0 + n_here], nb_b)
         src = jnp.asarray(cs[:, edges[:, 0]], dtype=jnp.int32)
         dst = jnp.asarray(cs[:, edges[:, 1]], dtype=jnp.int32)
+        misses0 = _scorer.cache_info().misses
         fn = _scorer(dims, wrap, machine.core_dims, traffic, ne_b, nb_b)
+        obs.annotate(compile_cache=(
+            "miss" if _scorer.cache_info().misses > misses0 else "hit"))
         ev = fn(src, dst, w, bw_fields)
         sl = slice(c0, c0 + n_here)
         for key in ev:

@@ -41,7 +41,7 @@ import warnings
 
 import numpy as np
 
-from repro import faults
+from repro import faults, obs
 
 SFC_KINDS = ("Z", "Gray", "FZ", "FZlow", "H")
 BACKENDS = ("vectorized", "recursive", "jax")
@@ -182,10 +182,13 @@ def order_points(
     if backend == "jax":
         mod = _jax_partition_module()
         if mod is not None:
-            faults.fire("partition.jax")
-            return mod.order_points_jax(
-                coords, nparts, sfc, weights=weights, dim_order=dim_order,
-                longest_dim=longest_dim, uneven_prime=uneven_prime)
+            with obs.span("partition.jax", points=len(coords),
+                          nparts=int(nparts)):
+                faults.fire("partition.jax")
+                return mod.order_points_jax(
+                    coords, nparts, sfc, weights=weights,
+                    dim_order=dim_order, longest_dim=longest_dim,
+                    uneven_prime=uneven_prime)
         _warn_partition_fallback()  # vectorized engine is bit-identical
     from .partition import vectorized_order
     return vectorized_order(
@@ -257,11 +260,13 @@ def order_points_batched(
     if backend == "jax":
         mod = _jax_partition_module()
         if mod is not None:
-            faults.fire("partition.jax")
-            return mod.order_points_batched_jax(
-                coords, nparts, sfc, dim_orders=dim_orders,
-                weights=weights, longest_dim=longest_dim,
-                uneven_prime=uneven_prime)
+            with obs.span("partition.jax", points=len(coords),
+                          nparts=int(nparts), batch=len(dim_orders)):
+                faults.fire("partition.jax")
+                return mod.order_points_batched_jax(
+                    coords, nparts, sfc, dim_orders=dim_orders,
+                    weights=weights, longest_dim=longest_dim,
+                    uneven_prime=uneven_prime)
         _warn_partition_fallback()  # vectorized engine is bit-identical
     from .partition import vectorized_order_batched
     return vectorized_order_batched(

@@ -65,6 +65,8 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 from jax import lax  # noqa: E402
 
+from repro import obs  # noqa: E402
+
 from .metrics_jax import bucket_size, pad_axis  # noqa: E402
 from .orderings import _split_counts  # noqa: E402
 
@@ -262,16 +264,10 @@ def _engine(d, sfc, longest_dim, weighted, npts_b, nb_b, tab_b):
         npts_b=npts_b, nb_b=nb_b))
 
 
-def partition_cache_stats() -> dict:
-    """Compile-cache counters of the bucketed jax partitioner."""
-    info = _engine.cache_info()
-    return {"hits": int(info.hits), "misses": int(info.misses),
-            "entries": int(info.currsize)}
-
-
-def reset_partition_cache() -> None:
-    """Drop the compiled sweeps and zero the hit/miss counters."""
-    _engine.cache_clear()
+# registry-backed stat/reset pair (repro.obs); auto-registers with
+# ``obs.snapshot()`` under "partition_jax"
+partition_cache_stats, reset_partition_cache = \
+    obs.instrument_compile_cache("partition_jax", _engine)
 
 
 # ---------------------------------------------------------------------------
@@ -325,8 +321,11 @@ def order_points_batched_jax(
             longest_dim=longest_dim, uneven_prime=uneven_prime)
     cols, sdo, w, tab, npts_b, nb_b, tab_b = _prepare(
         coords, nparts, dim_orders, weights, uneven_prime)
+    misses0 = _engine.cache_info().misses
     fn = _engine(d, sfc, bool(longest_dim), weights is not None,
                  npts_b, nb_b, tab_b)
+    obs.annotate(compile_cache=(
+        "miss" if _engine.cache_info().misses > misses0 else "hit"))
     out = fn(cols, sdo, w, tab, np.int32(n), np.int32(B),
              np.int32(nparts))
     return np.asarray(out)[:B, :n].astype(np.int64)

@@ -264,6 +264,13 @@ def active() -> bool:
     return _REGISTRY.active
 
 
+# the registry's per-spec counters join the process-wide telemetry
+# snapshot (repro.obs is stdlib-only; no import cycle)
+from repro import obs as _obs  # noqa: E402
+
+_obs.register_provider("faults", stats)
+
+
 @contextmanager
 def injected(site: str, kind: str, **opts):
     """Arm one fault for the duration of a ``with`` block."""

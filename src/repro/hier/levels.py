@@ -31,10 +31,9 @@ tests/test_hier.py for the asserted identity.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
+from repro import obs
 from repro.core.machine import Allocation
 from repro.core.mapping import MappingResult
 
@@ -101,51 +100,68 @@ def map_hierarchical(
     # fewer tasks than nodes; the coarse map then picks the closest
     # router subset exactly like the flat tnum < pnum case)
     nclusters = min(nrouters, max(1, -(-tnum // cores_per_node)))
-    t0 = time.perf_counter()
+    # span-derived stage timings (repro.obs): same schema as before —
+    # coarsen_s + {fused_s | partition_s + score_s} + refine_s + total_s
     timings = {}
-    agg = aggregate_tasks(
-        graph, nclusters, task_coords=tc, task_weights=task_weights,
-        sfc=cfg.sfc, longest_dim=cfg.longest_dim,
-        uneven_prime=cfg.uneven_prime, backend=pipe.order_backend)
-    timings["coarsen_s"] = time.perf_counter() - t0
+    with obs.span("pipeline.map", hierarchy="node",
+                  partition_backend=pipe.partition_backend,
+                  score_backend=cfg.score_backend,
+                  sweep_points=int(nclusters + nrouters)) as root:
+        with obs.span("pipeline.coarsen", points=int(tnum),
+                      nclusters=int(nclusters)) as sp:
+            agg = aggregate_tasks(
+                graph, nclusters, task_coords=tc,
+                task_weights=task_weights,
+                sfc=cfg.sfc, longest_dim=cfg.longest_dim,
+                uneven_prime=cfg.uneven_prime,
+                backend=pipe.order_backend)
+        timings["coarsen_s"] = sp.duration_s
 
-    # stage 2: the UNCHANGED batched rotation sweep, at router granularity
-    pc = pipe.machine_coords(router_alloc)
-    cands = rotation_candidates(agg.coarse.coords.shape[1], pc.shape[1],
-                                cfg.rotations)
-    coarse_best = None
-    if pipe._fused is not None:
-        t1 = time.perf_counter()
-        coarse_best = pipe._fused.run(agg.coarse, router_alloc,
-                                      agg.coarse.coords, pc, cands,
-                                      task_weights=agg.weights)
-        if coarse_best is not None:
-            timings["fused_s"] = time.perf_counter() - t1
-    if coarse_best is None:
-        t1 = time.perf_counter()
-        results = pipe.map_candidates(agg.coarse.coords, pc, cands,
-                                      task_weights=agg.weights)
-        timings["partition_s"] = time.perf_counter() - t1
-        t1 = time.perf_counter()
-        if len(results) == 1:
-            coarse_best = results[0]
-        else:
-            coarse_best, best_i, scores = pipe.search.best(
-                agg.coarse, router_alloc, results)
-            coarse_best.score = float(scores[best_i][0])
-        timings["score_s"] = time.perf_counter() - t1
+        # stage 2: the UNCHANGED batched rotation sweep, at router
+        # granularity
+        pc = pipe.machine_coords(router_alloc)
+        cands = rotation_candidates(agg.coarse.coords.shape[1],
+                                    pc.shape[1], cfg.rotations)
+        root.annotate(candidates=len(cands))
+        coarse_best = None
+        if pipe._fused is not None:
+            with obs.span("pipeline.fused") as sp:
+                coarse_best = pipe._fused.run(
+                    agg.coarse, router_alloc, agg.coarse.coords, pc,
+                    cands, task_weights=agg.weights)
+            if coarse_best is not None:
+                timings["fused_s"] = sp.duration_s
+        if coarse_best is None:
+            with obs.span("pipeline.partition",
+                          points=int(nclusters + nrouters)) as sp:
+                results = pipe.map_candidates(
+                    agg.coarse.coords, pc, cands,
+                    task_weights=agg.weights)
+            timings["partition_s"] = sp.duration_s
+            with obs.span("pipeline.score",
+                          candidates=len(cands)) as sp:
+                if len(results) == 1:
+                    coarse_best = results[0]
+                else:
+                    coarse_best, best_i, scores = pipe.search.best(
+                        agg.coarse, router_alloc, results)
+                    coarse_best.score = float(scores[best_i][0])
+            timings["score_s"] = sp.duration_s
 
-    # stage 3: bounded greedy inter-node swaps (monotone), then expand
-    t1 = time.perf_counter()
-    c2r, rstats = refine_swaps(
-        machine, agg.coarse, router_coords,
-        coarse_best.task_to_proc,
-        objective=pipe.search.objective,
-        rounds=cfg.refine_rounds, top=cfg.refine_top,
-        degree=cfg.refine_degree, score_backend=cfg.score_backend)
-    t2p = assign_cores(agg.labels, c2r, core_router, tc, nrouters)
-    timings["refine_s"] = time.perf_counter() - t1
-    timings["total_s"] = time.perf_counter() - t0
+        # stage 3: bounded greedy inter-node swaps (monotone), expand
+        with obs.span("pipeline.refine",
+                      rounds=int(cfg.refine_rounds)) as sp:
+            c2r, rstats = refine_swaps(
+                machine, agg.coarse, router_coords,
+                coarse_best.task_to_proc,
+                objective=pipe.search.objective,
+                rounds=cfg.refine_rounds, top=cfg.refine_top,
+                degree=cfg.refine_degree,
+                score_backend=cfg.score_backend)
+            t2p = assign_cores(agg.labels, c2r, core_router, tc,
+                               nrouters)
+        timings["refine_s"] = sp.duration_s
+    timings["total_s"] = root.duration_s
 
     stats = {
         "hierarchy": "node",
@@ -160,6 +176,7 @@ def map_hierarchical(
         "coarsen_points": int(tnum),
         "partition_backend": pipe.partition_backend,
         "timings": timings,
+        "trace_id": root.trace_id,
     }
     stats.update(rstats)
     return MappingResult(t2p, rotation=coarse_best.rotation,

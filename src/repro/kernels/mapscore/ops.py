@@ -24,7 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro import faults
+from repro import faults, obs
 from repro.core.machine import Machine
 # bucketing + padding rules shared with the jax backend: the two
 # accelerator paths must agree on bucket boundaries or cache keys drift
@@ -55,15 +55,10 @@ def _compiled(dims, wrap, core_dims, traffic, ne_b, tile, nb_b, ncols,
         traffic=traffic, tile=tile, interpret=interpret))
 
 
-def scorer_cache_stats() -> dict:
-    """Compile-cache counters of the bucketed pallas scorer."""
-    info = _compiled.cache_info()
-    return {"hits": int(info.hits), "misses": int(info.misses),
-            "entries": int(info.currsize)}
-
-
-def reset_scorer_cache() -> None:
-    _compiled.cache_clear()
+# registry-backed stat/reset pair (repro.obs); auto-registers with
+# ``obs.snapshot()`` under "scorer_pallas"
+scorer_cache_stats, reset_scorer_cache = obs.instrument_compile_cache(
+    "scorer_pallas", _compiled)
 
 
 _VMEM_WARNED: set = set()
@@ -129,7 +124,11 @@ def evaluate_candidates_pallas(machine: Machine, task_edges: np.ndarray,
         _, fn = metrics.get_evaluator("jax")
         return fn(machine, task_edges, edge_weights, coord_stack,
                   traffic=traffic, chunk_elems=chunk_elems)
-    faults.fire("kernel.mapscore")
+    # marker span at the fault hook: an injected kernel fault lands in
+    # the trace error-annotated exactly where a real one would; the
+    # enclosing score.pallas span carries the wall-clock
+    with obs.span("kernel.mapscore", candidates=int(nb), edges=int(ne)):
+        faults.fire("kernel.mapscore")
     if interpret is None:
         interpret = not _on_tpu()
 
@@ -176,8 +175,11 @@ def evaluate_candidates_pallas(machine: Machine, task_edges: np.ndarray,
         args = [jnp.asarray(src), jnp.asarray(dst), w_p]
         if traffic:
             args.append(inv_bw)
+        misses0 = _compiled.cache_info().misses
         fn = _compiled(dims, wrap, machine.core_dims, traffic, ne_b, tile,
                        nb_b, ncols, bool(interpret))
+        obs.annotate(compile_cache=(
+            "miss" if _compiled.cache_info().misses > misses0 else "hit"))
         outf, outi = fn(*args)
         outf = np.asarray(outf)
         outi = np.asarray(outi)

@@ -34,7 +34,7 @@ import functools
 
 import numpy as np
 
-from repro import faults
+from repro import faults, obs
 from repro.core import partition_jax as _pj  # noqa: F401  (enables x64)
 
 import jax.numpy as jnp  # noqa: E402
@@ -150,16 +150,10 @@ def _program(d_t, task_sfc, d_p, proc_sfc, longest_dim, weighted,
         tile=tile, interpret=interpret))
 
 
-def fused_cache_stats() -> dict:
-    """Compile-cache counters of the fused whole-pipeline program."""
-    info = _program.cache_info()
-    return {"hits": int(info.hits), "misses": int(info.misses),
-            "entries": int(info.currsize)}
-
-
-def reset_fused_cache() -> None:
-    """Drop the compiled fused programs and zero the counters."""
-    _program.cache_clear()
+# registry-backed stat/reset pair (repro.obs); auto-registers with
+# ``obs.snapshot()`` under "fused"
+fused_cache_stats, reset_fused_cache = obs.instrument_compile_cache(
+    "fused", _program)
 
 
 class FusedSweep:
@@ -254,6 +248,7 @@ class FusedSweep:
             else:
                 bw = ()
 
+        misses0 = _program.cache_info().misses
         fn = _program(td, task_sfc, pd, proc_sfc, bool(cfg.longest_dim),
                       task_weights is not None, tnum, pnum, t_sel, p_sel,
                       npts_bt, nbt_b, npts_bp, nbp_b, tab_b,
@@ -261,6 +256,11 @@ class FusedSweep:
                       tuple(bool(x) for x in machine.wrap),
                       machine.core_dims, tuple(objective), traffic, kind,
                       ne, ne_b, nb_b, ncols, tile, bool(interpret))
+        obs.annotate(
+            score_backend=kind, candidates=ncand,
+            compile_cache=("miss"
+                           if _program.cache_info().misses > misses0
+                           else "hit"))
         best_i, t2p, scores, ok = fn(cols_t, sdo_t, w_t, cols_p, sdo_p,
                                      w_p1, tab, edges, ew, acoords, bw)
         if not bool(ok):

@@ -28,10 +28,10 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.kmeans import closest_subset
 from repro.core.machine import Allocation
 from repro.core.mapping import MappingResult, match_parts
@@ -377,37 +377,50 @@ class MappingPipeline:
             return map_hierarchical(self, graph, alloc,
                                     task_coords=task_coords,
                                     task_weights=task_weights)
-        t0 = time.perf_counter()
-        pc = self.machine_coords(alloc)
-        tc = np.asarray(task_coords if task_coords is not None
-                        else graph.coords, dtype=np.float64)
-        cands = rotation_candidates(tc.shape[1], pc.shape[1], cfg.rotations)
+        # span-derived stage timings (repro.obs): the spans ARE the
+        # clocks — ``stats["timings"]`` keeps its exact legacy schema
+        # ({fused_s | partition_s + score_s} + total_s), derived from
+        # the span durations instead of a third ad-hoc timer dict
         timings = {}
-        best = None
-        if self._fused is not None:
-            t1 = time.perf_counter()
-            best = self._fused.run(graph, alloc, tc, pc, cands,
-                                   task_weights=task_weights)
-            if best is not None:
-                # partition + match + score ran as one device program;
-                # the stage split does not exist on this path
-                timings["fused_s"] = time.perf_counter() - t1
-        if best is None:
-            t1 = time.perf_counter()
-            results = self.map_candidates(tc, pc, cands,
-                                          task_weights=task_weights)
-            timings["partition_s"] = time.perf_counter() - t1
-            t1 = time.perf_counter()
-            if len(results) == 1:
-                best = results[0]
-            else:
-                best, best_i, scores = self.search.best(graph, alloc,
-                                                        results)
-                best.score = float(scores[best_i][0])
-            timings["score_s"] = time.perf_counter() - t1
-        timings["total_s"] = time.perf_counter() - t0
+        with obs.span("pipeline.map", hierarchy="flat",
+                      partition_backend=self.partition_backend,
+                      score_backend=cfg.score_backend) as root:
+            pc = self.machine_coords(alloc)
+            tc = np.asarray(task_coords if task_coords is not None
+                            else graph.coords, dtype=np.float64)
+            cands = rotation_candidates(tc.shape[1], pc.shape[1],
+                                        cfg.rotations)
+            sweep_points = int(len(tc) + alloc.n)
+            root.annotate(sweep_points=sweep_points,
+                          candidates=len(cands))
+            best = None
+            if self._fused is not None:
+                with obs.span("pipeline.fused") as sp:
+                    best = self._fused.run(graph, alloc, tc, pc, cands,
+                                           task_weights=task_weights)
+                if best is not None:
+                    # partition + match + score ran as one device
+                    # program; the stage split does not exist here
+                    timings["fused_s"] = sp.duration_s
+            if best is None:
+                with obs.span("pipeline.partition",
+                              points=sweep_points) as sp:
+                    results = self.map_candidates(
+                        tc, pc, cands, task_weights=task_weights)
+                timings["partition_s"] = sp.duration_s
+                with obs.span("pipeline.score",
+                              candidates=len(cands)) as sp:
+                    if len(results) == 1:
+                        best = results[0]
+                    else:
+                        best, best_i, scores = self.search.best(
+                            graph, alloc, results)
+                        best.score = float(scores[best_i][0])
+                timings["score_s"] = sp.duration_s
+        timings["total_s"] = root.duration_s
         best.stats.update(hierarchy="flat",
-                          sweep_points=int(len(tc) + alloc.n),
+                          sweep_points=sweep_points,
                           partition_backend=self.partition_backend,
-                          timings=timings)
+                          timings=timings,
+                          trace_id=root.trace_id)
         return best

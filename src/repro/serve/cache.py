@@ -18,6 +18,8 @@ from __future__ import annotations
 import collections
 import threading
 
+from repro import obs
+
 
 class LRUCache:
     """Least-recently-used cache with a hard entry-count bound."""
@@ -32,6 +34,8 @@ class LRUCache:
         self.misses = 0
         self.evictions = 0
         self.storms = 0
+        # weakly tracked: this instance's stats() joins obs.snapshot()
+        obs.register_object("lrus", self)
 
     def __len__(self) -> int:
         return len(self._data)

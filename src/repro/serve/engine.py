@@ -49,7 +49,7 @@ import time
 
 import numpy as np
 
-from repro import faults
+from repro import faults, obs
 from repro.core.signature import (array_digest, config_signature,
                                   mapping_signature)
 from repro.mapping import PipelineConfig, shared_pipeline
@@ -147,12 +147,16 @@ class MappingResponse:
     status    : "cold" (pipeline ran), "warm" (LRU hit) or "coalesced"
                 (shared an in-flight computation or a batch duplicate).
     latency_s : wall-clock seconds this request spent in the service.
+    trace_id  : this request's trace (repro.obs) — per-REQUEST, unlike
+                ``result.stats["trace_id"]`` which names the trace that
+                COMPUTED the (possibly cached, shared) result.
     """
 
     result: object
     signature: str
     status: str
     latency_s: float
+    trace_id: str | None = None
 
 
 class _InFlight:
@@ -215,6 +219,8 @@ class MappingService:
         self._adm = threading.Condition(threading.Lock())
         self._active = 0
         self._queued = 0
+        # weakly tracked: this instance's stats() joins obs.snapshot()
+        obs.register_object("services", self)
 
     # -- the miss path ---------------------------------------------------
 
@@ -253,10 +259,15 @@ class MappingService:
         if budget_s is None:
             return self._compute(request)
         box: dict = {}
+        # contextvars do not cross thread starts: re-parent the worker
+        # under the submitting thread's span so the rung's pipeline and
+        # backend spans stay inside the request's trace
+        parent = obs.current_span()
 
         def worker():
             try:
-                box["result"] = self._compute(request)
+                with obs.attach(parent):
+                    box["result"] = self._compute(request)
             except BaseException as e:
                 box["error"] = e
 
@@ -285,36 +296,50 @@ class MappingService:
         for i, (name, cfg, key) in enumerate(ladder):
             breaker = self._breakers.get(key)
             terminal = i == len(ladder) - 1
-            if not terminal and not breaker.allow():
-                self._bump("breaker_skips")
-                continue
-            budget = None
-            if self.deadline_s is not None and not terminal:
-                budget = self.deadline_s - (time.perf_counter() - t0)
-                if budget <= 0:
-                    self._bump("deadline_skips")
+            # one span per rung CONSIDERED: skips close instantly with
+            # a ``skipped`` attr, failures get ``error`` (span __exit__),
+            # so a degraded request's trace shows the whole walk
+            with obs.span("serve.rung", rung=name, index=i,
+                          backend_key=key, terminal=terminal) as sp:
+                if not terminal and not breaker.allow():
+                    self._bump("breaker_skips")
+                    obs.counter("serve.breaker_skips")
+                    sp.annotate(skipped="breaker")
                     continue
-            req = request if i == 0 else dataclasses.replace(
-                request, config=cfg, _signature=None)
-            try:
-                result = self._call_rung(req, budget)
-            except Exception as e:
-                last_err = e
-                breaker.record_failure()
-                self._bump("rung_failures")
-                if isinstance(e, DeadlineExceeded):
-                    self._bump("deadline_misses")
-                if terminal:
-                    raise
-                continue
-            breaker.record_success()
-            if i > 0:
-                result.stats["degraded"] = name
-                self._bump("degraded")
-                with self._lock:
-                    self._rung_counts[name] = \
-                        self._rung_counts.get(name, 0) + 1
-            return result
+                budget = None
+                if self.deadline_s is not None and not terminal:
+                    budget = self.deadline_s - (time.perf_counter() - t0)
+                    if budget <= 0:
+                        self._bump("deadline_skips")
+                        obs.counter("serve.deadline_skips")
+                        sp.annotate(skipped="deadline")
+                        continue
+                req = request if i == 0 else dataclasses.replace(
+                    request, config=cfg, _signature=None)
+                try:
+                    result = self._call_rung(req, budget)
+                except Exception as e:
+                    last_err = e
+                    breaker.record_failure()
+                    self._bump("rung_failures")
+                    obs.counter("serve.rung_failures")
+                    sp.annotate(error=type(e).__name__)
+                    if isinstance(e, DeadlineExceeded):
+                        self._bump("deadline_misses")
+                        obs.counter("serve.deadline_misses")
+                    if terminal:
+                        raise
+                    continue
+                breaker.record_success()
+                if i > 0:
+                    result.stats["degraded"] = name
+                    self._bump("degraded")
+                    obs.counter("serve.degraded")
+                    sp.annotate(degraded=name)
+                    with self._lock:
+                        self._rung_counts[name] = \
+                            self._rung_counts.get(name, 0) + 1
+                return result
         raise last_err if last_err is not None else RuntimeError(
             "degradation ladder exhausted")  # pragma: no cover
 
@@ -363,7 +388,19 @@ class MappingService:
         retries the full lookup once (recomputing if it becomes the new
         owner) so a transient fault poisons nothing — only a repeated
         failure propagates.
+
+        The whole walk runs inside one ``serve.request`` span: the root
+        of the request's trace (``MappingResponse.trace_id``), covering
+        every ladder rung attempted and the pipeline/backend spans
+        below them.
         """
+        with obs.span("serve.request") as root:
+            resp = self._serve(request)
+            root.annotate(status=resp.status,
+                          signature=resp.signature[:16])
+        return resp
+
+    def _serve(self, request: MappingRequest) -> MappingResponse:
         t0 = time.perf_counter()
         faults.fire("serve.cache", on_evict=self.results.storm)
         sig = request.signature()
@@ -439,6 +476,7 @@ class MappingService:
             if sig in seen:
                 with self._lock:
                     self._counts["coalesced"] += 1
+                obs.counter("serve.responses.coalesced")
                 resp = dataclasses.replace(resp, status="coalesced",
                                            latency_s=0.0)
             seen.add(sig)
@@ -473,8 +511,13 @@ class MappingService:
     def _respond(self, result, sig, status, t0) -> MappingResponse:
         with self._lock:
             self._counts[status] += 1
-        return MappingResponse(result, sig, status,
-                               time.perf_counter() - t0)
+        latency = time.perf_counter() - t0
+        obs.counter(f"serve.responses.{status}")
+        obs.observe("serve.latency_s", latency)
+        sp = obs.current_span()
+        return MappingResponse(result, sig, status, latency,
+                               trace_id=(sp.trace_id if sp is not None
+                                         else None))
 
 
 # Process-wide convenience instance for ad-hoc callers that want one

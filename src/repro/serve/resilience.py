@@ -55,6 +55,7 @@ import dataclasses
 import threading
 import time
 
+from repro import obs
 from repro.core.metrics import _BACKEND_CHAIN, get_evaluator
 from repro.core.orderings import resolve_partition_backend
 from repro.mapping import PipelineConfig
@@ -146,6 +147,7 @@ class CircuitBreaker:
         self._failures = 0
         self._probing = False
         self.opens += 1
+        obs.counter("serve.breaker_trips")
 
     def stats(self) -> dict:
         with self._lock:

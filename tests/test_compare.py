@@ -52,6 +52,30 @@ def test_ratio_noise_within_tolerance_passes(baseline):
     assert compare_mod.compare(noisy, baseline) == []
 
 
+def test_trace_overhead_ceiling_fails(baseline):
+    bad = copy.deepcopy(baseline)
+    # 8% tracing overhead busts the 2% absolute ceiling — max_value
+    # gates against the POLICY bound, not the baseline value
+    bad["benchmarks"]["end2end"]["derived"]["trace_overhead"] = 1.08
+    problems = compare_mod.compare(bad, baseline)
+    assert any("trace_overhead" in p and "ceiling" in p
+               for p in problems)
+
+
+def test_trace_overhead_within_ceiling_passes(baseline):
+    ok = copy.deepcopy(baseline)
+    ok["benchmarks"]["end2end"]["derived"]["trace_overhead"] = 1.015
+    assert compare_mod.compare(ok, baseline) == []
+
+
+def test_missing_bounded_field_fails(baseline):
+    bad = copy.deepcopy(baseline)
+    del bad["benchmarks"]["end2end"]["derived"]["trace_overhead"]
+    problems = compare_mod.compare(bad, baseline)
+    assert any("trace_overhead" in p and "missing" in p
+               for p in problems)
+
+
 def test_quality_metric_drift_fails(baseline):
     bad = copy.deepcopy(baseline)
     bad["benchmarks"]["hier"]["derived"]["wh_ratio"] *= 1.5
