@@ -52,6 +52,10 @@ POLICY = {
     "end2end": {"exact": ["winner_identical"],
                 "min_ratio": {"speedup": 0.5},
                 "max_value": {"trace_overhead": 1.02}},
+    "fused_h": {"exact": ["winner_identical", "refine_identical",
+                          "refine_monotone", "compile_once",
+                          "fused_compiles", "refine_rounds",
+                          "refine_accepted"]},
     "serve": {"exact": ["coalesced_identical", "warm_identical"],
               "min_ratio": {"warm_speedup": 0.5}},
     "faults": {"exact": ["failed", "degraded_all", "bijection_ok",

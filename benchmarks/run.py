@@ -27,6 +27,14 @@ trajectory.
                      as ONE compiled program per candidate stack;
                      winner bit-identity oracle always, >=3x cold
                      speedup floor on TPU only
+  fused_h          : Hilbert + fused refinement one-program cold path
+                     (ISSUE 9): cold ``select_mapping`` with
+                     ``sfc="H"`` and the device Hilbert state machine,
+                     winner bit-identical to the numpy oracle; the
+                     hierarchical path's swap refinement folded into
+                     the same compiled program, trajectory identical
+                     to the host ``refine_swaps``, one compile per
+                     (machine, bucket) candidate stack
   serve            : mapping-as-a-service cold vs warm vs coalesced
                      throughput (ISSUE 5): scenario-registry requests
                      through one MappingService — warm responses must
@@ -608,6 +616,126 @@ def main() -> None:
                 f"fused on-device pipeline speedup {speed:.2f}x below "
                 f"the 3x floor vs the host partitioner")
 
+    def fused_h_bench():
+        """Hilbert + fused refinement: the ISSUE-9 one-program cold
+        path.
+
+        Part 1 — cold flat ``select_mapping`` with ``sfc="H"`` and the
+        jax partition backend: the device Hilbert state machine
+        (Skilling's transpose) feeds the fused program, and the winner
+        must be bit-identical to the all-numpy Hilbert oracle.  Part 2
+        — ``hierarchy="node"``: the bounded greedy swap refinement
+        folds into the SAME compiled program; the refine trajectory
+        must equal the host ``refine_swaps`` decision-for-decision
+        (monotone), and the fused compile-cache counters must show one
+        program per (machine, bucket) candidate stack — a repeat run
+        may only add hits.  No speedup floor: this entry is a
+        correctness + compile-accounting oracle; the cold timings land
+        in the JSON trajectory.
+        """
+        import numpy as np
+
+        try:  # accelerator-only entry: SKIP (not fail) on numpy-only
+            import jax
+            from repro.mapping import fused as fused_mod
+        except Exception:  # noqa: BLE001 - jax optional
+            print("fused_h,0,skipped=no_jax")
+            return
+        from repro.core import (block_allocation, gemini_xk7,
+                                logical_mesh_graph, sfc_allocation,
+                                stencil_graph, tpu_v5e_pod)
+        from repro.mapping import MappingPipeline, PipelineConfig
+        from repro.meshmap.device_mesh import select_mapping
+
+        on_tpu = jax.default_backend() == "tpu"
+        if args.smoke:
+            side, n, dims, cores = 32, 1 << 8, (8, 4, 4), 4
+        elif args.full:
+            side, n, dims, cores = 256, 1 << 14, (32, 16, 16), 8
+        else:
+            side, n, dims, cores = 128, 1 << 12, (16, 16, 8), 4
+        sb = SCORE_BACKEND if SCORE_BACKEND != "numpy" else "jax"
+        if sb == "pallas" and not on_tpu and not args.smoke:
+            sb = "jax"
+
+        # part 1: cold flat select_mapping, device Hilbert vs host
+        machine = tpu_v5e_pod(side=side)
+        alloc = block_allocation(machine)
+        graph = logical_mesh_graph((side, side), (8.0, 64.0),
+                                   ("data", "model"))
+        ab = [8.0, 64.0]
+
+        def cold(pb, score):
+            t0 = time.perf_counter()
+            best, _, _ = select_mapping(graph, alloc, ab, rotations=4,
+                                        sfc="H", partition_backend=pb,
+                                        score_backend=score)
+            return time.perf_counter() - t0, best
+
+        cold("numpy", "numpy")  # warm the numpy pipelines
+        cold("jax", sb)         # compile the fused Hilbert programs
+        t_np, best_np = min((cold("numpy", "numpy") for _ in range(2)),
+                            key=lambda tb: tb[0])
+        t_jx, best_jx = min((cold("jax", sb) for _ in range(2)),
+                            key=lambda tb: tb[0])
+        assert np.array_equal(best_np.task_to_proc,
+                              best_jx.task_to_proc), (
+            "device-Hilbert select_mapping winner differs from the "
+            "numpy oracle")
+
+        # part 2: fused refinement vs the host refine_swaps trajectory
+        e = n.bit_length() - 1
+        a = e // 3
+        g = stencil_graph((1 << (e - 2 * a), 1 << a, 1 << a))
+        m2 = gemini_xk7(dims=dims, cores_per_node=cores)
+        alloc2 = sfc_allocation(m2, n, nfragments=2, seed=3)
+        kw = dict(sfc="H", rotations=6, hierarchy="node")
+        pipe_jx = MappingPipeline(PipelineConfig(
+            partition_backend="jax", score_backend=sb, **kw))
+
+        fused_mod.reset_fused_cache()
+        t0 = time.perf_counter()
+        rj = pipe_jx.map(g, alloc2)
+        t_h_cold = time.perf_counter() - t0
+        fst = fused_mod.fused_cache_stats()
+        compiles = fst["misses"]
+        assert compiles == fst["entries"], (
+            "fused cache entries != compiles")
+        t0 = time.perf_counter()
+        rj2 = pipe_jx.map(g, alloc2)
+        t_h_warm = time.perf_counter() - t0
+        fst = fused_mod.fused_cache_stats()
+        assert fst["misses"] == compiles and fst["hits"] >= compiles, (
+            "repeat fused Hilbert run recompiled: one program per "
+            "(machine, bucket) candidate stack is the contract")
+        t0 = time.perf_counter()
+        rn = MappingPipeline(PipelineConfig(**kw)).map(g, alloc2)
+        t_h_np = time.perf_counter() - t0
+
+        assert rj.stats.get("fused_refine") is True, (
+            "hierarchical fused path did not refine on device")
+        assert np.array_equal(rj.task_to_proc, rn.task_to_proc), (
+            "fused-refinement mapping differs from the host pipeline")
+        assert np.array_equal(rj.task_to_proc, rj2.task_to_proc)
+        assert rj.stats["refine_history"] == rn.stats["refine_history"], (
+            "fused refine trajectory != host refine_swaps")
+        hist = [h[0] for h in rj.stats["refine_history"]]
+        assert all(y <= x + 1e-9 for x, y in zip(hist, hist[1:])), (
+            "fused refinement worsened the objective")
+
+        print(f"fused_h,{t_jx*1e6:.0f},n={graph.n};hier_n={n};"
+              f"numpy_us={t_np*1e6:.0f};"
+              f"speedup={t_np/max(t_jx, 1e-9):.2f}x;"
+              f"hier_cold_us={t_h_cold*1e6:.0f};"
+              f"hier_warm_us={t_h_warm*1e6:.0f};"
+              f"hier_numpy_us={t_h_np*1e6:.0f};"
+              f"winner_identical=1;refine_identical=1;"
+              f"refine_monotone=1;compile_once=1;"
+              f"fused_compiles={compiles};"
+              f"refine_rounds={rj.stats['refine_rounds_run']};"
+              f"refine_accepted={rj.stats['refine_accepted']};"
+              f"score_backend={sb};interpret={0 if on_tpu else 1}")
+
     def serve_bench():
         """Mapping-as-a-service: cold vs warm vs coalesced (ISSUE 5).
 
@@ -723,6 +851,7 @@ def main() -> None:
         "candidates": candidates_bench,
         "mapscore": mapscore_bench,
         "end2end": end2end_bench,
+        "fused_h": fused_h_bench,
         "serve": serve_bench,
         "faults": faults_bench,
         "hier": hier_bench,

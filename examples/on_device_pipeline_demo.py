@@ -11,6 +11,12 @@ bit-identical to the all-numpy pipeline (the lexsort tie order is the
 oracle), and the compile-cache counters show the whole sweep is ONE
 cache entry that repeat calls hit.
 
+The second half demos the ISSUE-9 cold path: ``sfc="H"`` swaps the
+device Hilbert state machine (Skilling's transpose) into the same
+fused program, and ``hierarchy="node"`` folds the bounded greedy swap
+refinement into it too — coarse sweep + refinement, one compile, the
+refine trajectory bit-identical to the host ``refine_swaps``.
+
     PYTHONPATH=src python examples/on_device_pipeline_demo.py
 """
 
@@ -75,6 +81,35 @@ def main() -> None:
           f"(score={res.stats['fused_score_backend']}), "
           f"fused_s={t['fused_s'] * 1e3:.1f}ms, winner bit-identical to "
           f"the numpy pipeline: True")
+
+    # ISSUE 9: the device Hilbert curve in the same fused program.  The
+    # winner must match the all-host Hilbert pipeline bit for bit.
+    hj = MappingPipeline(PipelineConfig(
+        sfc="H", rotations=8, partition_backend="jax",
+        score_backend="jax")).map(graph, alloc)
+    hn = MappingPipeline(PipelineConfig(sfc="H", rotations=8)
+                         ).map(graph, alloc)
+    assert np.array_equal(hj.task_to_proc, hn.task_to_proc)
+    print(f"Hilbert sweep on device: fused={hj.stats['fused']}, winner "
+          f"bit-identical to the host Hilbert pipeline: True")
+
+    # ... and the one-program cold path: hierarchy="node" folds the
+    # swap refinement into the SAME compiled program (coarse Hilbert
+    # sweep + propose/delta-score/apply rounds, early exit), with the
+    # refine trajectory bit-identical to the host refine_swaps.
+    kw = dict(sfc="H", rotations=8, hierarchy="node")
+    rj = MappingPipeline(PipelineConfig(
+        partition_backend="jax", score_backend="jax", **kw)
+    ).map(graph, alloc)
+    rn = MappingPipeline(PipelineConfig(**kw)).map(graph, alloc)
+    assert np.array_equal(rj.task_to_proc, rn.task_to_proc)
+    assert rj.stats["refine_history"] == rn.stats["refine_history"]
+    print(f"fused refinement: fused_refine={rj.stats['fused_refine']}, "
+          f"rounds={rj.stats['refine_rounds_run']}, "
+          f"swaps accepted={rj.stats['refine_accepted']}, score "
+          f"{rj.stats['refine_initial']:.1f} -> "
+          f"{rj.stats['refine_final']:.1f}, trajectory identical to "
+          f"host refine_swaps: True")
 
     pstats = partition_jax.partition_cache_stats()
     fstats = fused_mod.fused_cache_stats()

@@ -170,6 +170,15 @@ def order_points(
     """
     coords = np.asarray(coords, dtype=np.float64)
     if sfc == "H":
+        if backend == "jax":
+            mod = _jax_partition_module()
+            if mod is not None:
+                with obs.span("partition.jax", points=len(coords),
+                              nparts=int(nparts)):
+                    faults.fire("partition.jax")
+                    return mod.order_points_jax(
+                        coords, nparts, "H", weights=weights)
+            _warn_partition_fallback()  # host Hilbert is bit-identical
         return _hilbert_order_points(coords.copy(), nparts, weights=weights)
     if sfc not in SFC_KINDS:
         raise ValueError(f"unknown sfc {sfc!r}")
@@ -222,31 +231,53 @@ def order_points_batched(
     ----------
     coords : (n, d) float array, shared by every candidate.
     nparts : target number of parts (same contract as ``order_points``).
-    sfc : one of ``Z | Gray | FZ | FZlow``.  Hilbert is rejected: its
-        index genuinely depends on the column order, so a rotation sweep
-        over "H" must permute the coordinates per candidate (the mapping
-        pipeline keeps the per-candidate loop for it).
+    sfc : one of ``Z | Gray | FZ | FZlow | H``.
     dim_orders : (B, d) int array; row ``b`` is candidate ``b``'s
-        cut-dimension priority permutation (the rotation itself).
+        cut-dimension priority permutation (the rotation itself).  For
+        ``"H"`` there is no cut priority — the Hilbert index depends on
+        the column order itself — so each row acts as a COLUMN
+        permutation of the cloud instead: row ``b`` equals
+        ``order_points(coords[:, dim_orders[b]], nparts, "H")``, which
+        is exactly what the rotation sweep's per-candidate
+        ``apply_permutation`` + ``order_points`` pair computes.
     weights, longest_dim, uneven_prime : as in ``order_points``.
-    backend : ``"vectorized"`` runs the single batched engine pass;
-        ``"jax"`` the on-device batched sweep (silent fallback to
-        vectorized); ``"recursive"`` loops the reference recursion per
-        row (the cross-check oracle — slow, kept for equivalence tests).
+    backend : ``"vectorized"`` runs the single batched engine pass (for
+        ``"H"`` a per-candidate Hilbert-index loop over ONE memoised
+        quantisation); ``"jax"`` the on-device batched sweep (silent
+        fallback to vectorized); ``"recursive"`` loops the reference
+        per-candidate oracle (slow, kept for equivalence tests).
 
     Returns
     -------
     mu : (B, n) int64 part numbers.  Row ``b`` is bit-identical to both
         ``order_points(coords, nparts, sfc, dim_order=dim_orders[b])``
         and ``order_points(coords[:, dim_orders[b]], nparts, sfc)``
-        (asserted in tests/test_batched.py).
+        (asserted in tests/test_batched.py; for ``"H"`` only the
+        latter identity holds — see ``dim_orders`` above).
     """
     coords = np.asarray(coords, dtype=np.float64)
     dim_orders = np.atleast_2d(np.asarray(dim_orders, dtype=np.int64))
     if sfc == "H":
-        raise ValueError(
-            "order_points_batched cannot batch Hilbert: 'H' depends on "
-            "the column order itself, not just the cut priority")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend == "recursive":
+            # the per-candidate oracle: quantise per permuted cloud
+            return np.stack([
+                _hilbert_order_points(coords[:, do].copy(), nparts,
+                                      weights=weights)
+                for do in dim_orders])
+        if backend == "jax":
+            mod = _jax_partition_module()
+            if mod is not None:
+                with obs.span("partition.jax", points=len(coords),
+                              nparts=int(nparts), batch=len(dim_orders)):
+                    faults.fire("partition.jax")
+                    return mod.order_points_batched_jax(
+                        coords, nparts, "H", dim_orders=dim_orders,
+                        weights=weights)
+            _warn_partition_fallback()  # host Hilbert is bit-identical
+        return _hilbert_order_batched(coords, nparts, dim_orders,
+                                      weights=weights)
     if sfc not in SFC_KINDS:
         raise ValueError(f"unknown sfc {sfc!r}")
     if backend not in BACKENDS:
@@ -532,34 +563,47 @@ def _hilbert_grid(shape: tuple[int, ...], bits: int) -> np.ndarray:
     return h.reshape(shape)
 
 
-def hilbert_key(coords: np.ndarray, bits: int | None = None) -> np.ndarray:
-    """Hilbert index of arbitrary float points (quantised to a grid).
+def hilbert_bits(n: int, d: int) -> int:
+    """Default Hilbert quantisation resolution (bits per dimension).
 
-    Default resolution: enough bits to separate ~n points per
-    dimension, capped so the interleaved index fits int64.  Shared by
-    the generic Hilbert part numbering below and the hierarchical
-    subsystem's intra-node task ordering (:mod:`repro.hier.refine`).
+    Enough bits to separate ~n points per dimension, capped so the
+    interleaved index fits int64.  One definition shared by the host
+    quantiser below and the device kernel
+    (:mod:`repro.core.partition_jax`), which unrolls its Skilling loop
+    over this static value — the two MUST agree for bit-identity.
     """
-    coords = np.asarray(coords, dtype=np.float64)
-    n, d = coords.shape
-    if bits is None:
-        bits = max(1, min(62 // max(d, 1),
-                          int(np.ceil(np.log2(max(n, 2)) / max(d, 1))) + 2))
+    return max(1, min(62 // max(d, 1),
+                      int(np.ceil(np.log2(max(n, 2)) / max(d, 1))) + 2))
+
+
+def _hilbert_quantise(coords: np.ndarray, bits: int) -> np.ndarray:
+    """Quantise float points onto the 2^bits-per-side Hilbert grid."""
     side = 1 << bits
     lo = coords.min(axis=0)
     span = coords.max(axis=0) - lo
     span = np.where(span > 0, span, 1.0)
-    q = np.clip(((coords - lo) / span * (side - 1)).round().astype(np.int64),
-                0, side - 1)
-    return hilbert_index(q, bits)
+    return np.clip(((coords - lo) / span * (side - 1))
+                   .round().astype(np.int64), 0, side - 1)
 
 
-def _hilbert_order_points(coords: np.ndarray, nparts: int,
-                          weights: np.ndarray | None) -> np.ndarray:
-    """Hilbert ordering for arbitrary point sets: quantise to a grid,
-    order by Hilbert index, split into equal-count parts."""
-    n = len(coords)
-    h = hilbert_key(coords)
+def hilbert_key(coords: np.ndarray, bits: int | None = None) -> np.ndarray:
+    """Hilbert index of arbitrary float points (quantised to a grid).
+
+    Default resolution: :func:`hilbert_bits`.  Shared by the generic
+    Hilbert part numbering below and the hierarchical subsystem's
+    intra-node task ordering (:mod:`repro.hier.refine`).
+    """
+    coords = np.asarray(coords, dtype=np.float64)
+    n, d = coords.shape
+    if bits is None:
+        bits = hilbert_bits(n, d)
+    return hilbert_index(_hilbert_quantise(coords, bits), bits)
+
+
+def _hilbert_split(h: np.ndarray, nparts: int,
+                   weights: np.ndarray | None) -> np.ndarray:
+    """Part numbers from Hilbert indices: stable-sort, split the run."""
+    n = len(h)
     order = np.argsort(h, kind="stable")
     mu = np.zeros(n, dtype=np.int64)
     if weights is None:
@@ -578,3 +622,33 @@ def _hilbert_order_points(coords: np.ndarray, nparts: int,
         mu[order] = np.minimum((cw / total * nparts).astype(np.int64),
                                nparts - 1)
     return mu
+
+
+def _hilbert_order_points(coords: np.ndarray, nparts: int,
+                          weights: np.ndarray | None) -> np.ndarray:
+    """Hilbert ordering for arbitrary point sets: quantise to a grid,
+    order by Hilbert index, split into equal-count parts."""
+    return _hilbert_split(hilbert_key(coords), nparts, weights)
+
+
+def _hilbert_order_batched(coords: np.ndarray, nparts: int,
+                           dim_orders: np.ndarray,
+                           weights: np.ndarray | None) -> np.ndarray:
+    """Batched Hilbert numbering: one candidate per ``dim_orders`` row,
+    row ``b`` bit-identical to ``order_points(coords[:, dim_orders[b]],
+    nparts, "H")``.
+
+    Per-column quantisation commutes with column permutation (lo/span
+    are per-dimension), so the grid coordinates are computed ONCE and
+    each candidate only re-runs the Skilling index on a column gather —
+    the memoisation that lets rotation sweeps include "H" without B
+    full quantisation passes.
+    """
+    n, d = coords.shape
+    bits = hilbert_bits(n, d)
+    q = _hilbert_quantise(coords, bits)
+    out = np.empty((len(dim_orders), n), dtype=np.int64)
+    for b, do in enumerate(dim_orders):
+        out[b] = _hilbert_split(hilbert_index(q[:, do], bits), nparts,
+                                weights)
+    return out

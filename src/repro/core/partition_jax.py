@@ -68,7 +68,7 @@ from jax import lax  # noqa: E402
 from repro import obs  # noqa: E402
 
 from .metrics_jax import bucket_size, pad_axis  # noqa: E402
-from .orderings import _split_counts  # noqa: E402
+from .orderings import _split_counts, hilbert_bits  # noqa: E402
 
 __all__ = ["order_points_jax", "order_points_batched_jax",
            "partition_cache_stats", "reset_partition_cache"]
@@ -249,16 +249,122 @@ def _sweep(cols, sdo, w, npl_tab, n, B, nparts, *, d, sfc, longest_dim,
     return out.reshape(nb_b, npts_b)
 
 
+def _hilbert_sweep(cols, sdo, w, npl_tab, n, B, nparts, *, d, bits,
+                   weighted, npts_b, nb_b):
+    """Batched Hilbert numbering on device (Skilling's transpose
+    algorithm, mirroring ``orderings.hilbert_index`` /
+    ``orderings._hilbert_split`` op for op).
+
+    Same call signature as :func:`_sweep` so both share ``_engine``'s
+    compile cache.  ``bits`` is static — the Skilling state machine and
+    the bit interleave unroll over it.  The per-candidate dim-order is
+    folded in as a *column gather on the quantised grid*: quantisation
+    is per-dimension, so it commutes with column permutation and runs
+    once for the whole sweep; candidate ``b`` is then bit-identical to
+    the host ``order_points(coords[:, dim_orders[b]], nparts, "H")``.
+    """
+    del npl_tab  # Hilbert splits need no npl table
+    N = nb_b * npts_b
+    side = 1 << bits
+    # --- quantise once (reference: orderings._hilbert_quantise) --------
+    maskp = jnp.arange(npts_b) < n
+    lo = jnp.min(jnp.where(maskp[None, :], cols, jnp.inf), axis=1)
+    hi = jnp.max(jnp.where(maskp[None, :], cols, -jnp.inf), axis=1)
+    span = hi - lo
+    span = jnp.where(span > 0, span, 1.0)
+    q = jnp.clip(jnp.round((cols - lo[:, None]) / span[:, None]
+                           * (side - 1)).astype(jnp.int64), 0, side - 1)
+    # --- fold the dim-order: Xc[i] = q[sdo[b, i]] per candidate --------
+    sdo64 = sdo.astype(jnp.int64)
+    Xc = [jnp.take(q, sdo64[:, i], axis=0).reshape(-1) for i in range(d)]
+    # --- Skilling transpose (reference: orderings.hilbert_index) -------
+    if d == 1:
+        h = Xc[0]
+    else:
+        M = 1 << (bits - 1)
+        Q = M
+        while Q > 1:  # inverse undo excess work
+            P = Q - 1
+            for i in range(d):
+                has = (Xc[i] & Q) != 0
+                Xc[0] = jnp.where(has, Xc[0] ^ P, Xc[0])
+                t = jnp.where(has, 0, (Xc[0] ^ Xc[i]) & P)
+                Xc[0] = Xc[0] ^ t
+                Xc[i] = Xc[i] ^ t
+            Q >>= 1
+        for i in range(1, d):  # Gray encode
+            Xc[i] = Xc[i] ^ Xc[i - 1]
+        t = jnp.zeros(N, dtype=jnp.int64)
+        Q = M
+        while Q > 1:
+            has = (Xc[d - 1] & Q) != 0
+            t = jnp.where(has, t ^ (Q - 1), t)
+            Q >>= 1
+        for i in range(d):
+            Xc[i] = Xc[i] ^ t
+        h = jnp.zeros(N, dtype=jnp.int64)
+        for i in range(d):  # interleave: bit b of dim i -> b*d + (d-1-i)
+            for b in range(bits):
+                h = h | (((Xc[i] >> b) & 1) << (b * d + (d - 1 - i)))
+    # --- segmented stable sort + split (ref: _hilbert_split) -----------
+    pos = jnp.arange(N, dtype=_I32)
+    block = pos // npts_b
+    realN = ((pos % npts_b) < n) & (block < B)
+    # h < 2^(bits*d) <= 2^62, so this pad key sorts strictly last
+    hkey = jnp.where(realN, h, jnp.int64(1) << 62)
+    ops = (block, hkey, pos, w[pos % npts_b])
+    ops = lax.sort(ops, num_keys=2, is_stable=True)
+    pts, w_srt = ops[2], ops[3]
+    rank = (jnp.arange(N) % npts_b).astype(jnp.int64)
+    n64 = n.astype(jnp.int64)
+    np64 = nparts.astype(jnp.int64)
+    if not weighted:
+        # closed form of searchsorted((arange(1,np)*n)//np, j, "right")
+        part = jnp.minimum(((rank + 1) * np64 - 1) // n64, np64 - 1)
+    else:
+        is_start = rank == 0
+
+        def scan_f(c, xw):
+            wi, st = xw
+            c = jnp.where(st, wi, c + wi)
+            return c, c
+
+        _, incl = lax.scan(scan_f, jnp.float64(0.0), (w_srt, is_start),
+                           unroll=8)
+        cwx = incl - w_srt  # EXCLUSIVE prefix, like cumsum(w) - w
+        blk0 = (jnp.arange(N) // npts_b) * npts_b
+        last = blk0 + n64 - 1
+        w_last = w_srt[last]
+        # total = cw[-1] + w[-1] with cw[-1] = incl[-1] - w[-1]: keep the
+        # host's exact association (NOT plain incl[last])
+        total = (incl[last] - w_last) + w_last
+        part = jnp.minimum((cwx / total * np64.astype(_F64))
+                           .astype(jnp.int64), np64 - 1)
+    out = jnp.zeros(N, dtype=_I32).at[pts].set(
+        part.astype(_I32), unique_indices=True)
+    return out.reshape(nb_b, npts_b)
+
+
 @functools.lru_cache(maxsize=None)
-def _engine(d, sfc, longest_dim, weighted, npts_b, nb_b, tab_b):
+def _engine(d, sfc, longest_dim, weighted, npts_b, nb_b, tab_b, bits):
     """One jit-compiled sweep per (engine knobs, shape bucket).
 
     ``tab_b`` is part of the key even though the function never reads
     it: every cache entry then sees exactly ONE input shape set, so the
     ``lru_cache`` hit/miss counters are a truthful compile-count proxy
-    (mirrors ``metrics_jax._scorer``).
+    (mirrors ``metrics_jax._scorer``).  ``bits`` is the static Hilbert
+    resolution (0 for the MJ sweeps); call sites MUST pass it
+    positionally — ``lru_cache`` keys keyword spellings separately and
+    a split key would double-compile.  For ``sfc == "H"`` callers
+    canonicalise ``longest_dim=True`` (Hilbert has no cut dimensions)
+    so the knob cannot fragment the cache either.
     """
     del tab_b  # shape part of the key only
+    if sfc == "H":
+        return jax.jit(functools.partial(
+            _hilbert_sweep, d=d, bits=bits, weighted=weighted,
+            npts_b=npts_b, nb_b=nb_b))
+    del bits
     return jax.jit(functools.partial(
         _sweep, d=d, sfc=sfc, longest_dim=longest_dim, weighted=weighted,
         npts_b=npts_b, nb_b=nb_b))
@@ -321,9 +427,13 @@ def order_points_batched_jax(
             longest_dim=longest_dim, uneven_prime=uneven_prime)
     cols, sdo, w, tab, npts_b, nb_b, tab_b = _prepare(
         coords, nparts, dim_orders, weights, uneven_prime)
+    if sfc == "H":
+        bits, ld = hilbert_bits(n, d), True  # canonical H cache key
+    else:
+        bits, ld = 0, bool(longest_dim)
     misses0 = _engine.cache_info().misses
-    fn = _engine(d, sfc, bool(longest_dim), weights is not None,
-                 npts_b, nb_b, tab_b)
+    fn = _engine(d, sfc, ld, weights is not None,
+                 npts_b, nb_b, tab_b, bits)
     obs.annotate(compile_cache=(
         "miss" if _engine.cache_info().misses > misses0 else "hit"))
     out = fn(cols, sdo, w, tab, np.int32(n), np.int32(B),

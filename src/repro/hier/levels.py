@@ -125,10 +125,17 @@ def map_hierarchical(
         root.annotate(candidates=len(cands))
         coarse_best = None
         if pipe._fused is not None:
+            # the refine spec folds the swap-refinement rounds into the
+            # SAME device program (coarse sweep + refinement, one
+            # compile); the refine_s span below then only times the
+            # stats unpack + core expansion
             with obs.span("pipeline.fused") as sp:
                 coarse_best = pipe._fused.run(
                     agg.coarse, router_alloc, agg.coarse.coords, pc,
-                    cands, task_weights=agg.weights)
+                    cands, task_weights=agg.weights,
+                    refine=dict(rounds=cfg.refine_rounds,
+                                top=cfg.refine_top,
+                                degree=cfg.refine_degree))
             if coarse_best is not None:
                 timings["fused_s"] = sp.duration_s
         if coarse_best is None:
@@ -148,16 +155,29 @@ def map_hierarchical(
                     coarse_best.score = float(scores[best_i][0])
             timings["score_s"] = sp.duration_s
 
-        # stage 3: bounded greedy inter-node swaps (monotone), expand
-        with obs.span("pipeline.refine",
-                      rounds=int(cfg.refine_rounds)) as sp:
-            c2r, rstats = refine_swaps(
-                machine, agg.coarse, router_coords,
-                coarse_best.task_to_proc,
-                objective=pipe.search.objective,
-                rounds=cfg.refine_rounds, top=cfg.refine_top,
-                degree=cfg.refine_degree,
-                score_backend=cfg.score_backend)
+        # stage 3: bounded greedy inter-node swaps (monotone), expand.
+        # When the fused program already refined on device, this span
+        # only unpacks its stats and expands to cores — same
+        # stats/timings schema either way (refine_s always present).
+        fused_refined = (coarse_best is not None
+                         and coarse_best.stats.get("fused_refine", False))
+        with obs.span("pipeline.refine", rounds=int(cfg.refine_rounds),
+                      fused=bool(fused_refined)) as sp:
+            if fused_refined:
+                c2r = np.asarray(coarse_best.task_to_proc,
+                                 dtype=np.int64)
+                rstats = {k: coarse_best.stats[k] for k in (
+                    "refine_rounds_run", "refine_accepted",
+                    "refine_evaluated", "refine_history",
+                    "refine_initial", "refine_final")}
+            else:
+                c2r, rstats = refine_swaps(
+                    machine, agg.coarse, router_coords,
+                    coarse_best.task_to_proc,
+                    objective=pipe.search.objective,
+                    rounds=cfg.refine_rounds, top=cfg.refine_top,
+                    degree=cfg.refine_degree,
+                    score_backend=cfg.score_backend)
             t2p = assign_cores(agg.labels, c2r, core_router, tc,
                                nrouters)
         timings["refine_s"] = sp.duration_s
@@ -179,5 +199,9 @@ def map_hierarchical(
         "trace_id": root.trace_id,
     }
     stats.update(rstats)
+    if fused_refined:
+        stats["fused_refine"] = True
+        stats["fused_score_backend"] = \
+            coarse_best.stats.get("fused_score_backend")
     return MappingResult(t2p, rotation=coarse_best.rotation,
                          score=float(rstats["refine_final"]), stats=stats)

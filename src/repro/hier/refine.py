@@ -179,7 +179,6 @@ def refine_swaps(
     Returns ``(refined cluster_to_router, stats)`` where stats carries
     the per-round objective history and acceptance counts.
     """
-    _, evaluator = get_evaluator(score_backend)  # hoisted: resolve once
     router_coords = np.asarray(router_coords, dtype=np.int64)
     c2r = np.asarray(cluster_to_router, dtype=np.int64).copy()
     nclusters = len(c2r)
@@ -192,6 +191,14 @@ def refine_swaps(
     edges = coarse.edges
     w = np.asarray(coarse.weights, dtype=np.float64)
     separable = all(k in ("weighted_hops", "total_hops") for k in objective)
+    if separable:
+        # hop sums of integer-valued volumes are EXACT in f64 whatever
+        # the summation order — the numpy evaluator on the compacted
+        # union graphs is both the cheapest and the one the fused
+        # device refinement (repro.mapping.fused) matches bit for bit
+        _, evaluator = get_evaluator("numpy")
+    else:
+        _, evaluator = get_evaluator(score_backend)  # resolve once
 
     base = _scores(machine, edges, w, router_coords[c2r][None],
                    objective, evaluator)[0]
@@ -223,12 +230,11 @@ def refine_swaps(
         k = min(degree, nrouters - 1)
         if k <= 0:
             break
-        # argpartition + a small per-row sort: a full argsort of the
-        # (top, nrouters) distance matrix showed up in the profile
-        pidx = np.argpartition(d, k - 1, axis=1)[:, :k]
-        sub = np.take_along_axis(d, pidx, axis=1)
-        near = np.take_along_axis(pidx, np.argsort(sub, axis=1,
-                                                   kind="stable"), axis=1)
+        # full stable argsort (NOT argpartition): integer hop distances
+        # tie constantly, and the stable order — distance, then router
+        # id — is the one the fused device refinement reproduces bit
+        # for bit (argpartition picks tie-holders arbitrarily)
+        near = np.argsort(d, axis=1, kind="stable")[:, :k]
 
         # dedup unordered proposals: (cluster a, target router rb)
         seen = set()

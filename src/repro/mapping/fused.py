@@ -1,5 +1,5 @@
 """One-compiled-program rotation sweep: partition -> match -> score ->
-select, entirely on device.
+select -> (optionally) refine, entirely on device.
 
 When the pipeline resolves ``partition_backend="jax"`` AND a jax/pallas
 scoring backend, the whole batched rotation sweep of
@@ -13,10 +13,17 @@ index and the score matrix return to host — zero host<->device
 transfers between the partition and score stages.
 
 Results are bit-identical to the unfused path by construction: the
-partitioner is the bit-identity-tested jax engine, the matching gathers
-mirror ``map_candidates``'s ``part_to_proc``/``mu_t`` assembly integer
-for integer, and the score columns are the same f32-derived values the
-host :class:`CandidateSearch` lexsorts (f32->f64 casts are exact).
+partitioner is the bit-identity-tested jax engine (all five SFC kinds,
+including the unrolled Skilling Hilbert state machine), the matching
+gathers mirror ``map_candidates``'s ``part_to_proc``/``mu_t`` assembly
+integer for integer, and the score columns are the same f32-derived
+values the host :class:`CandidateSearch` lexsorts (f32->f64 casts are
+exact).  With a ``refine`` spec (the hier path), the bounded greedy
+swap-refinement loop of :func:`repro.hier.refine.refine_swaps` also
+runs inside the program — a ``lax.while_loop`` over propose ->
+delta-score -> monotone apply with early exit — so coarse sweep AND
+refinement are one compile and only the final permutation lands on
+host.
 
 The compile cache mirrors ``metrics_jax._scorer`` /
 ``partition_jax._engine``: every entry is keyed by the full static
@@ -38,6 +45,7 @@ from repro import faults, obs
 from repro.core import partition_jax as _pj  # noqa: F401  (enables x64)
 
 import jax.numpy as jnp  # noqa: E402
+from jax import lax  # noqa: E402
 
 from repro.core import metrics_jax  # noqa: E402
 from repro.core.mapping import MappingResult  # noqa: E402
@@ -57,12 +65,29 @@ MAX_FUSED_ELEMS = 1 << 27
 def _build(*, d_t, task_sfc, d_p, proc_sfc, longest_dim, weighted,
            tnum, pnum, t_sel, p_sel, npts_bt, nbt_b, npts_bp, nbp_b,
            tab_b, dims, wrap, core_dims, objective, traffic, score_kind,
-           ne, ne_b, nb_b, ncols, tile, interpret):
-    """The traced body of one fused program (all kwargs static)."""
-    eng_t = _pj._engine(d_t, task_sfc, longest_dim, weighted,
-                        npts_bt, nbt_b, tab_b)
-    eng_p = _pj._engine(d_p, proc_sfc, longest_dim, False,
-                        npts_bp, nbp_b, tab_b)
+           ne, ne_b, nb_b, ncols, tile, interpret, refine):
+    """The traced body of one fused program (all kwargs static).
+
+    ``refine`` is ``None`` (sweep only) or a static ``(rounds, top,
+    degree)`` triple: the hier swap-refinement loop then runs INSIDE
+    the same program, after winner selection, as a ``lax.while_loop``
+    over propose -> delta-score -> monotone apply (mirroring
+    ``repro.hier.refine.refine_swaps`` decision for decision), and only
+    the refined cluster -> router permutation returns to host.
+    """
+    from repro.core.orderings import hilbert_bits
+
+    # Hilbert has no cut dimensions: canonicalise longest_dim so the
+    # knob cannot fragment the partition-engine compile cache, and
+    # derive the static quantisation resolution both engines unroll over
+    ld_t = True if task_sfc == "H" else longest_dim
+    ld_p = True if proc_sfc == "H" else longest_dim
+    bits_t = hilbert_bits(tnum, d_t) if task_sfc == "H" else 0
+    bits_p = hilbert_bits(pnum, d_p) if proc_sfc == "H" else 0
+    eng_t = _pj._engine(d_t, task_sfc, ld_t, weighted,
+                        npts_bt, nbt_b, tab_b, bits_t)
+    eng_p = _pj._engine(d_p, proc_sfc, ld_p, False,
+                        npts_bp, nbp_b, tab_b, bits_p)
     if score_kind == "jax":
         score_fn = metrics_jax._scorer(dims, wrap, core_dims, traffic,
                                        ne_b, nb_b)
@@ -74,9 +99,54 @@ def _build(*, d_t, task_sfc, d_p, proc_sfc, longest_dim, weighted,
     nup = max(p_sel) + 1   # 0..nut-1; likewise proc side)
     t_sel_a = np.asarray(t_sel, dtype=np.int32)
     p_sel_a = np.asarray(p_sel, dtype=np.int32)
+    nobj = len(objective)
+    nd = len(dims) - core_dims
+    wrapped = tuple(bool(x) for x in wrap)
+
+    # static refinement bounds (host: top/degree clamps + k <= 0 break)
+    if refine is not None:
+        rounds, top, degree = refine
+        top_s = min(int(top), tnum)
+        k_s = min(int(degree), pnum - 1)
+        rounds_eff = int(rounds) if (rounds > 0 and top_s > 0
+                                     and k_s > 0) else 0
+        P = max(top_s * k_s, 1)
+        separable = all(k in ("weighted_hops", "total_hops")
+                        for k in objective)
+        if not separable:
+            nb2 = bucket_size(k_s, lo=1)  # one hot-row chunk per launch
+            if score_kind == "jax":
+                score_fn2 = metrics_jax._scorer(dims, wrap, core_dims,
+                                                traffic, ne_b, nb2)
+            else:
+                score_fn2 = _mapscore._compiled(dims, wrap, core_dims,
+                                                traffic, ne_b, tile, nb2,
+                                                ncols, interpret)
+
+    def _hops(x, y):
+        """int64 network hop distance, mirrors ``metrics.pairwise_hops``
+        (reads the first ``nd`` columns; wrap dims take the torus min)."""
+        tot = jnp.zeros(jnp.broadcast_shapes(x.shape[:-1], y.shape[:-1]),
+                        dtype=jnp.int64)
+        for kk in range(nd):
+            dk = jnp.abs(x[..., kk].astype(jnp.int64)
+                         - y[..., kk].astype(jnp.int64))
+            if wrapped[kk]:
+                dk = jnp.minimum(dk, dims[kk] - dk)
+            tot = tot + dk
+        return tot
+
+    def _lex_less1(s, t):
+        """Vectorised mirror of ``hier.refine._lex_less`` (tol 1e-12):
+        reversed fold so component 0 dominates."""
+        res = jnp.bool_(False)
+        for j in reversed(range(nobj)):
+            res = jnp.where(s[j] < t[j] - 1e-12, True,
+                            jnp.where(s[j] > t[j] + 1e-12, False, res))
+        return res
 
     def run(cols_t, sdo_t, w_t, cols_p, sdo_p, w_p1, tab, edges, ew,
-            acoords, bw):
+            ew64, acoords, bw):
         # --- stage 2: both partitions (inner jit calls inline) ---------
         mu_t = eng_t(cols_t, sdo_t, w_t, tab, jnp.int32(tnum),
                      jnp.int32(nut), jnp.int32(pnum))[:, :tnum]
@@ -91,40 +161,238 @@ def _build(*, d_t, task_sfc, d_p, proc_sfc, longest_dim, weighted,
         ok = jnp.min(ptp) >= 0
         t2p = jnp.take_along_axis(ptp[p_sel_a], mu_t[t_sel_a], axis=1)
 
+        e0, e1 = edges[:, 0], edges[:, 1]
+
+        def batch_cols(cs_padded, fn):
+            """(B, nobj) f64 objective matrix for a padded stack batch
+            (the same column builder the sweep's winner selection and
+            the host CandidateSearch lexsort use)."""
+            src = cs_padded[:, e0, :ncols]
+            dst = cs_padded[:, e1, :ncols]
+            if score_kind == "jax":
+                ev = fn(src, dst, ew, bw)
+                wh, th = ev["weighted_hops"], ev["total_hops"]
+                data, lat = ev.get("data_max"), ev.get("latency_max")
+            else:
+                args = [src, dst, ew.reshape(-1, 1)]
+                if traffic:
+                    args.append(bw)
+                outf, outi = fn(*args)
+                wh, th = outf[:, 0], outi[:, 0]
+                data = outf[:, 1] if traffic else None
+                lat = outf[:, 2] if traffic else None
+
+            def col(key):
+                if key == "weighted_hops":
+                    return wh.astype(jnp.float64)
+                if key == "total_hops":
+                    return th.astype(jnp.float64)
+                if key == "average_hops":
+                    return th.astype(jnp.float64) / ne
+                return (data if key == "data_max"
+                        else lat).astype(jnp.float64)
+
+            return jnp.stack([col(k) for k in objective], axis=1)
+
         # --- stage 4: score + select -----------------------------------
         cs = acoords[t2p]                          # (ncand, tnum, ndim)
         cs = jnp.pad(cs, ((0, nb_b - ncand), (0, 0), (0, 0)))
-        src = cs[:, edges[:, 0], :ncols]
-        dst = cs[:, edges[:, 1], :ncols]
-        if score_kind == "jax":
-            ev = score_fn(src, dst, ew, bw)
-            wh = ev["weighted_hops"]
-            th = ev["total_hops"]
-            data = ev.get("data_max")
-            lat = ev.get("latency_max")
-        else:
-            args = [src, dst, ew.reshape(-1, 1)]
-            if traffic:
-                args.append(bw)
-            outf, outi = score_fn(*args)
-            wh, th = outf[:, 0], outi[:, 0]
-            data = outf[:, 1] if traffic else None
-            lat = outf[:, 2] if traffic else None
-
-        def col(key):
-            if key == "weighted_hops":
-                return wh.astype(jnp.float64)
-            if key == "total_hops":
-                return th.astype(jnp.float64)
-            if key == "average_hops":
-                return th.astype(jnp.float64) / ne
-            return (data if key == "data_max" else lat).astype(jnp.float64)
-
-        scores = jnp.stack([col(k) for k in objective], axis=1)[:ncand]
+        scores = batch_cols(cs, score_fn)[:ncand]
         keys = tuple(scores[:, j]
                      for j in reversed(range(scores.shape[1])))
         best_i = jnp.lexsort(keys)[0].astype(jnp.int32)
-        return best_i, t2p[best_i], scores, ok
+        if refine is None:
+            return best_i, t2p[best_i], scores, ok
+
+        # --- stage 5: fused swap refinement ----------------------------
+        # (mirrors hier.refine.refine_swaps decision for decision; the
+        # host pass is the oracle — see tests/test_hier.py)
+        rc = acoords.astype(jnp.int64)            # (pnum, ncols) rows
+        c2r0 = t2p[best_i]                        # cluster -> router
+        r2c0 = jnp.full((pnum,), -1, jnp.int32).at[c2r0].set(
+            jnp.arange(tnum, dtype=jnp.int32))
+
+        def full_cols(c2r_vec):
+            """Objective tuple of a whole assignment.  Separable keys
+            sum exactly in f64 (bit-identical to the host's numpy
+            evaluator for integer-valued volumes); otherwise the same
+            f32 scorer the host jax/pallas evaluator runs."""
+            if separable:
+                st = rc[c2r_vec]
+                h = _hops(st[e0], st[e1]).astype(jnp.float64)
+                outc = []
+                for kkey in objective:
+                    outc.append(jnp.sum(ew64 * h)
+                                if kkey == "weighted_hops"
+                                else jnp.sum(h))
+                return jnp.stack(outc)
+            cs1 = jnp.pad(acoords[c2r_vec][None],
+                          ((0, nb_b - 1), (0, 0), (0, 0)))
+            return batch_cols(cs1, score_fn)[0]
+
+        base0 = full_cols(c2r0)
+        hist0 = jnp.zeros((rounds_eff + 1, nobj),
+                          dtype=jnp.float64).at[0].set(base0)
+
+        def body(state):
+            rnd, done, c2r, r2c, base, hist, hist_len, acc_t, ev_t = state
+            cc = rc[c2r]                          # (tnum, ncols) i64
+            ho = _hops(cc[e0], cc[e1])            # pad edges (0,0) -> 0
+            h_e = ho.astype(jnp.float64) * ew64
+            contrib = (jnp.zeros(tnum, jnp.float64)
+                       .at[e0].add(h_e).at[e1].add(h_e))
+            _, hot = lax.sort(
+                (-contrib, jnp.arange(tnum, dtype=jnp.int32)),
+                num_keys=1, is_stable=True)       # == argsort(-contrib)
+            hot = hot[:top_s]
+            hot_valid = contrib[hot] > 0
+
+            # network-nearest allocated routers (full stable argsort:
+            # ties break on router id, matching the host after ISSUE 9)
+            dm = _hops(cc[hot][:, None, :], rc[None, :, :]
+                       ).astype(jnp.float64)
+            dm = dm.at[jnp.arange(top_s), c2r[hot]].set(jnp.inf)
+            colid = jnp.broadcast_to(jnp.arange(pnum, dtype=jnp.int32),
+                                     (top_s, pnum))
+            _, nearf = lax.sort((dm, colid), dimension=1, num_keys=1,
+                                is_stable=True)
+            near = nearf[:, :k_s]
+
+            # proposals in host generation order (hot-major), deduped by
+            # unordered router pair, first occurrence wins: valid hot
+            # rows precede invalid ones, so padding can never steal a key
+            a = jnp.repeat(hot, k_s)
+            va = jnp.repeat(hot_valid, k_s)
+            ra = c2r[a]
+            rb = near.reshape(-1)
+            b = r2c[rb]
+            gen = jnp.arange(P, dtype=jnp.int32)
+            dkey = (jnp.minimum(ra, rb).astype(jnp.int64) * pnum
+                    + jnp.maximum(ra, rb))
+            skey, sgen = lax.sort((dkey, gen), num_keys=1, is_stable=True)
+            firstk = jnp.concatenate([jnp.ones(1, bool),
+                                      skey[1:] != skey[:-1]])
+            valid = va & jnp.zeros(P, bool).at[sgen].set(firstk)
+            n_valid = jnp.sum(valid.astype(jnp.int32))
+
+            def chunk_scores(args):
+                """Scores of one hot row's k_s proposals (chunked so the
+                edited-stack footprint stays k_s * ne_b, not P * ne_b)."""
+                ac, bc, rac, rbc = args
+                if separable:
+                    # score = base + sum_incident w * (h_new - h_old):
+                    # exactly the host's base - base_union + union value
+                    # for integer-valued f64 volumes
+                    pa, pb = rc[rbc], rc[rac]     # (k_s, ncols) new rows
+                    isa0 = e0[None, :] == ac[:, None]
+                    isb0 = (e0[None, :] == bc[:, None]) & \
+                        (bc[:, None] >= 0)
+                    isa1 = e1[None, :] == ac[:, None]
+                    isb1 = (e1[None, :] == bc[:, None]) & \
+                        (bc[:, None] >= 0)
+                    hn = jnp.zeros((k_s, ne_b), jnp.int64)
+                    for kk in range(nd):
+                        x0 = jnp.where(
+                            isa0, pa[:, kk][:, None],
+                            jnp.where(isb0, pb[:, kk][:, None],
+                                      cc[e0, kk][None, :]))
+                        x1 = jnp.where(
+                            isa1, pa[:, kk][:, None],
+                            jnp.where(isb1, pb[:, kk][:, None],
+                                      cc[e1, kk][None, :]))
+                        dk = jnp.abs(x0 - x1)
+                        if wrapped[kk]:
+                            dk = jnp.minimum(dk, dims[kk] - dk)
+                        hn = hn + dk
+                    dh = (hn - ho[None, :]).astype(jnp.float64)
+                    outc = []
+                    for j, kkey in enumerate(objective):
+                        dcol = (jnp.sum(ew64[None, :] * dh, axis=1)
+                                if kkey == "weighted_hops"
+                                else jnp.sum(dh, axis=1))
+                        outc.append(base[j] + dcol)
+                    return jnp.stack(outc, axis=1)
+                stacks = jnp.broadcast_to(acoords[c2r][None],
+                                          (k_s, tnum, ncols))
+                rowb = jnp.where(bc >= 0, bc, tnum)
+                stacks = stacks.at[jnp.arange(k_s), ac].set(acoords[rbc])
+                stacks = stacks.at[jnp.arange(k_s), rowb].set(
+                    acoords[rac], mode="drop")
+                cs2 = jnp.pad(stacks, ((0, nb2 - k_s), (0, 0), (0, 0)))
+                return batch_cols(cs2, score_fn2)[:k_s]
+
+            pscores = lax.map(
+                chunk_scores,
+                (a.reshape(top_s, k_s), b.reshape(top_s, k_s),
+                 ra.reshape(top_s, k_s), rb.reshape(top_s, k_s))
+            ).reshape(P, nobj)
+            pscores = jnp.where(valid[:, None], pscores, jnp.inf)
+
+            # host np.lexsort order: primary = objective[0], ties by gen
+            outs = lax.sort(
+                tuple(pscores[:, j] + 0.0 for j in range(nobj))
+                + (gen, a, ra, rb, b),
+                num_keys=nobj, is_stable=True)
+            s_srt = jnp.stack(outs[:nobj], axis=1)
+            a_s, ra_s, rb_s, b_s = outs[nobj + 1:nobj + 5]
+
+            # greedy disjoint accept, break at first non-improving
+            def accept(carry, xs):
+                touched, stop = carry
+                s_i, ra_i, rb_i = xs
+                improving = _lex_less1(s_i, base)
+                take = improving & ~stop & ~(touched[ra_i] | touched[rb_i])
+                stop = stop | ~improving
+                touched = touched.at[ra_i].set(touched[ra_i] | take)
+                touched = touched.at[rb_i].set(touched[rb_i] | take)
+                return (touched, stop), take
+
+            (_, _), take = lax.scan(
+                accept, (jnp.zeros(pnum, bool), jnp.bool_(False)),
+                (s_srt, ra_s, rb_s))
+
+            def apply_take(tm):
+                ia = jnp.where(tm, a_s, tnum)
+                ib = jnp.where(tm & (b_s >= 0), b_s, tnum)
+                nc = c2r.at[ia].set(rb_s, mode="drop")
+                nc = nc.at[ib].set(ra_s, mode="drop")
+                nr = r2c.at[jnp.where(tm, rb_s, pnum)].set(a_s,
+                                                           mode="drop")
+                nr = nr.at[jnp.where(tm, ra_s, pnum)].set(b_s,
+                                                          mode="drop")
+                return nc, nr
+
+            nc, nr = apply_take(take)
+            combined = full_cols(nc)
+            nchosen = jnp.sum(take.astype(jnp.int32))
+            # interacting swaps made it worse: fall back to the single
+            # best proposal, whose exact score is known to improve
+            use_single = (nchosen > 1) & ~_lex_less1(combined, base)
+            take1 = (gen == 0) & _lex_less1(s_srt[0], base)
+            nc1, nr1 = apply_take(take1)
+            c2r_n = jnp.where(use_single, nc1, nc)
+            r2c_n = jnp.where(use_single, nr1, nr)
+            comb_f = jnp.where(use_single, s_srt[0], combined)
+            nchosen_f = jnp.where(use_single, 1, nchosen)
+            improved = (nchosen > 0) & _lex_less1(comb_f, base)
+
+            hist_n = jnp.where(improved, hist.at[hist_len].set(comb_f),
+                               hist)
+            return (rnd + 1, ~improved,
+                    jnp.where(improved, c2r_n, c2r),
+                    jnp.where(improved, r2c_n, r2c),
+                    jnp.where(improved, comb_f, base),
+                    hist_n, hist_len + improved.astype(jnp.int32),
+                    (acc_t + jnp.where(improved, nchosen_f, 0))
+                    .astype(jnp.int32),
+                    (ev_t + n_valid).astype(jnp.int32))
+
+        state = (jnp.int32(0), jnp.bool_(False), c2r0, r2c0, base0,
+                 hist0, jnp.int32(1), jnp.int32(0), jnp.int32(0))
+        state = lax.while_loop(
+            lambda st: (st[0] < rounds_eff) & ~st[1], body, state)
+        _, _, c2r, _, _, hist, hist_len, acc_t, ev_t = state
+        return (best_i, c2r, scores, ok, hist, hist_len, acc_t, ev_t)
 
     return run
 
@@ -133,7 +401,7 @@ def _build(*, d_t, task_sfc, d_p, proc_sfc, longest_dim, weighted,
 def _program(d_t, task_sfc, d_p, proc_sfc, longest_dim, weighted,
              tnum, pnum, t_sel, p_sel, npts_bt, nbt_b, npts_bp, nbp_b,
              tab_b, dims, wrap, core_dims, objective, traffic, score_kind,
-             ne, ne_b, nb_b, ncols, tile, interpret):
+             ne, ne_b, nb_b, ncols, tile, interpret, refine):
     """One jitted fused program per (pipeline knobs, shape bucket).
 
     Every cache entry sees exactly one input shape set, so the
@@ -147,7 +415,7 @@ def _program(d_t, task_sfc, d_p, proc_sfc, longest_dim, weighted,
         npts_bp=npts_bp, nbp_b=nbp_b, tab_b=tab_b, dims=dims, wrap=wrap,
         core_dims=core_dims, objective=objective, traffic=traffic,
         score_kind=score_kind, ne=ne, ne_b=ne_b, nb_b=nb_b, ncols=ncols,
-        tile=tile, interpret=interpret))
+        tile=tile, interpret=interpret, refine=refine))
 
 
 # registry-backed stat/reset pair (repro.obs); auto-registers with
@@ -172,7 +440,13 @@ class FusedSweep:
         self.score_kind = score_kind
 
     def run(self, graph, alloc, task_coords, proc_coords, cands,
-            task_weights=None):
+            task_weights=None, refine=None):
+        """``refine`` (hier only): a ``{"rounds", "top", "degree"}``
+        dict folds the bounded swap-refinement loop into the same
+        program; the returned result then carries the REFINED
+        cluster -> router assignment plus the full ``refine_*`` stats
+        the host :func:`repro.hier.refine.refine_swaps` would emit
+        (``stats["fused_refine"]`` marks it for the caller)."""
         faults.fire("fused")
         pipe = self.pipe
         cfg = pipe.config
@@ -229,7 +503,15 @@ class FusedSweep:
         w_np = np.ones(ne) if graph.weights is None else \
             np.asarray(graph.weights, dtype=np.float64)
         ew = jnp.asarray(pad_axis(w_np.astype(np.float32), ne_b))
+        ew64 = jnp.asarray(pad_axis(w_np, ne_b))  # exact refine deltas
         acoords = jnp.asarray(alloc.coords, dtype=jnp.int32)
+
+        # refinement folds in only for the bijective cluster -> router
+        # case (hier always has tnum == pnum here; anything else keeps
+        # the host refine_swaps pass, which handles it loosely)
+        refine_t = (int(refine["rounds"]), int(refine["top"]),
+                    int(refine["degree"])) \
+            if refine is not None and tnum == pnum else None
 
         nd = machine.ndim - machine.core_dims
         tile = min(_mapscore.TILE_MAX, ne_b)
@@ -255,14 +537,16 @@ class FusedSweep:
                       tuple(int(x) for x in machine.dims),
                       tuple(bool(x) for x in machine.wrap),
                       machine.core_dims, tuple(objective), traffic, kind,
-                      ne, ne_b, nb_b, ncols, tile, bool(interpret))
+                      ne, ne_b, nb_b, ncols, tile, bool(interpret),
+                      refine_t)
         obs.annotate(
             score_backend=kind, candidates=ncand,
             compile_cache=("miss"
                            if _program.cache_info().misses > misses0
                            else "hit"))
-        best_i, t2p, scores, ok = fn(cols_t, sdo_t, w_t, cols_p, sdo_p,
-                                     w_p1, tab, edges, ew, acoords, bw)
+        out = fn(cols_t, sdo_t, w_t, cols_p, sdo_p, w_p1, tab, edges,
+                 ew, ew64, acoords, bw)
+        best_i, t2p, scores, ok = out[:4]
         if not bool(ok):
             return None  # a part got no processor: unfused path raises
         best_i = int(best_i)
@@ -273,4 +557,20 @@ class FusedSweep:
         best.score = float(np.asarray(scores)[best_i][0])
         best.stats.update(fused=True, fused_score_backend=kind,
                           winner_index=best_i)
+        if refine_t is not None:
+            hist, hist_len, acc_t, ev_t = out[4:]
+            hist_len = int(hist_len)
+            history = [tuple(float(x) for x in row)
+                       for row in np.asarray(hist)[:hist_len]]
+            best.stats.update(
+                fused_refine=True,
+                refine_rounds_run=hist_len - 1,
+                refine_accepted=int(acc_t),
+                refine_evaluated=int(ev_t),
+                refine_history=history,
+                refine_initial=history[0][0],
+                refine_final=history[-1][0])
+            best.score = history[-1][0]
+            obs.annotate(refine_rounds=hist_len - 1,
+                         refine_accepted=int(acc_t))
         return best

@@ -180,7 +180,7 @@ class MappingPipeline:
         # batched vectorized one (the fused gathers mirror it exactly)
         self._fused = None
         if (cfg.fused != "off" and self.order_backend == "jax"
-                and cfg.sweep == "batched" and cfg.sfc != "H"):
+                and cfg.sweep == "batched"):
             from repro.core.metrics import get_evaluator
             resolved_score, _ = get_evaluator(cfg.score_backend)
             if resolved_score in ("jax", "pallas"):
@@ -294,17 +294,18 @@ class MappingPipeline:
         ``sweep="loop"`` per-candidate path (guarded by the
         ``candidates`` benchmark and tests/test_batched.py).
 
-        Falls back to the loop for configurations the dim-order identity
-        cannot express: Hilbert numbering (depends on the column order
-        itself) and the tnum < pnum closest-subset case (the subset's
-        centroid iteration sums coordinates in column order).
+        Falls back to the loop only for the tnum < pnum closest-subset
+        case (the subset's centroid iteration sums coordinates in
+        column order).  Hilbert batches too: ``order_points_batched``
+        treats each ``dim_orders`` row as a COLUMN permutation of the
+        cloud (quantisation commutes with it), bit-identical to the
+        per-candidate loop.
         """
         cfg = self.config
         tc = np.asarray(task_coords, dtype=np.float64)
         pc = np.asarray(proc_coords, dtype=np.float64)
         (tnum, td), (pnum, pd) = tc.shape, pc.shape
-        if (cfg.sweep == "loop" or len(cands) == 1 or cfg.sfc == "H"
-                or tnum < pnum):
+        if cfg.sweep == "loop" or len(cands) == 1 or tnum < pnum:
             return [
                 self.map_candidate(tc, pc, task_weights=task_weights,
                                    task_perm=c.task_perm,

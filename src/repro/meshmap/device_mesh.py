@@ -60,7 +60,7 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
                   rotations: int = 16, return_report: bool = False,
                   score_backend: str = "numpy",
                   partition_backend: str = "numpy",
-                  hierarchy: str = "flat", service=None):
+                  hierarchy: str = "flat", sfc: str = "FZ", service=None):
     """Build a Mesh whose device order minimises modeled link traffic.
 
     Candidate-selection (the paper's §4.3 rotation search, generalised):
@@ -92,7 +92,7 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
     best, best_metrics, base_metrics = select_mapping(
         graph, alloc, ab, rotations=rotations, score_backend=score_backend,
         partition_backend=partition_backend, hierarchy=hierarchy,
-        service=service)
+        sfc=sfc, service=service)
     order = best.task_to_proc  # logical flat index -> device index
     dev_array = np.array(devices, dtype=object)[order].reshape(axis_sizes)
     mesh = Mesh(dev_array, tuple(axis_names))
@@ -104,9 +104,13 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
 def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
                    score_backend: str = "numpy",
                    partition_backend: str = "numpy",
-                   hierarchy: str = "flat", service=None):
-    """Candidate search: default order + FZ mappings under raw and
-    traffic-scaled task coordinates x rotations; returns
+                   hierarchy: str = "flat", sfc: str = "FZ",
+                   service=None):
+    """Candidate search: default order + SFC-geometric mappings (``sfc``
+    picks the part numbering — "FZ" is the paper's winner, "H" the
+    Hilbert curve; all five kinds run on-device under
+    ``partition_backend="jax"``) under raw and traffic-scaled task
+    coordinates x rotations; returns
     (best MappingResult, best metrics, default metrics).
 
     Candidate generation and scoring both run through the unified
@@ -149,7 +153,7 @@ def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
             tc = tc / np.asarray(axis_bytes, dtype=float)
         for rot in (0, rotations):
             config = PipelineConfig(
-                sfc="FZ", shift=True, bandwidth_scale=True, rotations=rot,
+                sfc=sfc, shift=True, bandwidth_scale=True, rotations=rot,
                 score_backend=score_backend,
                 partition_backend=partition_backend, hierarchy=hierarchy)
             if service is not None:

@@ -195,7 +195,7 @@ def fused_candidate(config: PipelineConfig) -> bool:
     ``unfused`` rung).
     """
     if (config.fused == "off" or config.sweep != "batched"
-            or config.sfc == "H" or config.backend != "vectorized"):
+            or config.backend != "vectorized"):
         return False
     if resolve_partition_backend(config.partition_backend) != "jax":
         return False

@@ -6,7 +6,8 @@ backends.
   wrap/non-wrap dims, core dims and weighted edges;
 - ``order_points_batched`` must match per-candidate ``order_points``
   (both the ``dim_order`` form and the column-permuted-cloud form, and
-  the recursive backend) across SFC kinds, weights and
+  the recursive backend) across SFC kinds — including the Hilbert
+  curve, whose batched rows are column permutations — weights and
   ``uneven_prime``;
 - the jax scoring backend must match numpy within fp tolerance on every
   metric key and fall back to numpy cleanly when jax is unavailable;
@@ -216,10 +217,33 @@ def test_order_points_batched_tie_heavy_grid():
             assert np.array_equal(mu[b], ref), (sfc, tuple(p))
 
 
-def test_order_points_batched_rejects_hilbert():
-    with pytest.raises(ValueError):
-        order_points_batched(np.zeros((4, 2)), 2, "H",
-                             dim_orders=np.array([[0, 1]]))
+@pytest.mark.parametrize("seed", range(6))
+def test_order_points_batched_hilbert_parity(seed):
+    """Batched Hilbert rows are COLUMN permutations: row ``b`` must
+    equal ``order_points(coords[:, dim_orders[b]], ..., "H")`` — the
+    quantisation grid commutes with column permutation, so one memoised
+    quantise pass serves every candidate."""
+    rng = np.random.default_rng(300 + seed)
+    d = int(rng.integers(1, 4))
+    n = int(rng.integers(20, 300))
+    nparts = int(rng.integers(2, 48))
+    weights = rng.random(n) if seed % 2 else None
+    coords = rng.normal(size=(n, d))
+    if seed % 3 == 0:  # duplicate-heavy: exercises the stable tie order
+        coords = np.repeat(coords[: max(n // 4, 1)], 4, axis=0)
+        if weights is not None:
+            weights = rng.random(len(coords))
+    perms = [tuple(rng.permutation(d)) for _ in range(3)]
+    dos = np.array(perms)
+    mu = order_points_batched(coords, nparts, "H", dim_orders=dos,
+                              weights=weights)
+    rec = order_points_batched(coords, nparts, "H", dim_orders=dos,
+                               weights=weights, backend="recursive")
+    assert np.array_equal(mu, rec)
+    for b, p in enumerate(perms):
+        ref = order_points(coords[:, list(p)], nparts, "H",
+                           weights=weights)
+        assert np.array_equal(mu[b], ref), (p, "permuted")
 
 
 # ---------------------------------------------------------------------------

@@ -294,6 +294,103 @@ def test_assign_cores_groups_clusters_on_nodes():
 
 
 # ---------------------------------------------------------------------------
+# fused on-device refinement (ISSUE 9): bit-identity vs host refine_swaps
+# ---------------------------------------------------------------------------
+
+def _fused_refine_case():
+    pytest.importorskip("jax")
+    m = gemini_xk7(dims=(8, 4, 4), cores_per_node=4)
+    alloc = sfc_allocation(m, 256, nfragments=2, seed=3)
+    g = stencil_graph(_grid(256))
+    return m, alloc, g
+
+
+_REFINE_STAT_KEYS = ("refine_rounds_run", "refine_accepted",
+                     "refine_evaluated", "refine_initial", "refine_final")
+
+
+@pytest.mark.parametrize("sfc", ["FZ", "H"])
+def test_fused_refinement_bit_identity_wh(sfc):
+    """The device refinement folded into the fused program must
+    reproduce the host refine_swaps trajectory decision-for-decision:
+    same accepted swaps, same per-round history, same final mapping."""
+    m, alloc, g = _fused_refine_case()
+    kw = dict(sfc=sfc, rotations=6, hierarchy="node")
+    host = MappingPipeline(PipelineConfig(**kw)).map(g, alloc)
+    dev = MappingPipeline(PipelineConfig(
+        partition_backend="jax", score_backend="jax", **kw)).map(g, alloc)
+    assert dev.stats.get("fused_refine") is True
+    assert not host.stats.get("fused_refine")
+    assert np.array_equal(host.task_to_proc, dev.task_to_proc)
+    assert dev.stats["refine_history"] == host.stats["refine_history"]
+    for k in _REFINE_STAT_KEYS:
+        assert dev.stats[k] == host.stats[k], k
+    # monotone on device too
+    hist = dev.stats["refine_history"]
+    for a, b in zip(hist, hist[1:]):
+        assert tuple(b) <= tuple(a)
+    # span-derived timings keep the host schema (refine_s always there)
+    assert {"fused_s", "refine_s", "coarsen_s", "total_s"} \
+        <= set(dev.stats["timings"])
+    assert {"partition_s", "score_s", "refine_s"} \
+        <= set(host.stats["timings"])
+
+
+def test_fused_refinement_bit_identity_latency_objective():
+    """Non-separable objectives route the fused refinement through the
+    SAME inlined scorer kind as the host comparison — the (latency_max,
+    weighted_hops) trajectory must match exactly."""
+    m, alloc, g = _fused_refine_case()
+    kw = dict(sfc="FZ", rotations=6, hierarchy="node",
+              objective=("latency_max", "weighted_hops"))
+    host = MappingPipeline(PipelineConfig(
+        score_backend="jax", **kw)).map(g, alloc)
+    dev = MappingPipeline(PipelineConfig(
+        partition_backend="jax", score_backend="jax", **kw)).map(g, alloc)
+    assert dev.stats.get("fused_refine") is True
+    assert np.array_equal(host.task_to_proc, dev.task_to_proc)
+    assert dev.stats["refine_history"] == host.stats["refine_history"]
+    hist = dev.stats["refine_history"]
+    for a, b in zip(hist, hist[1:]):
+        assert tuple(b) <= tuple(a)
+
+
+def test_fused_refinement_refine_rounds_zero():
+    """refine_rounds=0 must skip the device loop but keep the stats and
+    timings schema (history of length 1, nothing accepted)."""
+    m, alloc, g = _fused_refine_case()
+    res = MappingPipeline(PipelineConfig(
+        sfc="FZ", rotations=4, hierarchy="node", refine_rounds=0,
+        partition_backend="jax", score_backend="jax")).map(g, alloc)
+    assert res.stats["refine_rounds_run"] == 0
+    assert res.stats["refine_accepted"] == 0
+    assert len(res.stats["refine_history"]) == 1
+    assert res.stats["refine_final"] == res.stats["refine_initial"]
+    assert "refine_s" in res.stats["timings"]
+
+
+def test_fused_refinement_ladder_unfused_rung_bit_identical():
+    """PR-7 ladder honesty: the ``unfused`` rung (fused="off") of a
+    Hilbert + refinement config must exist and serve a bit-identical
+    result — degradation moves WHERE the algorithm runs, not what it
+    returns."""
+    pytest.importorskip("jax")
+    from repro.serve.resilience import degradation_ladder, fused_candidate
+    m, alloc, g = _fused_refine_case()
+    cfg = PipelineConfig(sfc="H", rotations=6, hierarchy="node",
+                         partition_backend="jax", score_backend="jax")
+    assert fused_candidate(cfg)
+    ladder = dict(degradation_ladder(cfg))
+    assert "unfused" in ladder
+    full = MappingPipeline(cfg).map(g, alloc)
+    unfused = MappingPipeline(ladder["unfused"]).map(g, alloc)
+    assert full.stats.get("fused_refine") is True
+    assert not unfused.stats.get("fused_refine")
+    assert np.array_equal(full.task_to_proc, unfused.task_to_proc)
+    assert full.stats["refine_history"] == unfused.stats["refine_history"]
+
+
+# ---------------------------------------------------------------------------
 # meshmap wiring
 # ---------------------------------------------------------------------------
 

@@ -4,9 +4,11 @@ The numpy engines (``partition.vectorized_order*``, whose lexsort tie
 order is the oracle) define the contract: the jax backend must return
 IDENTICAL permutations for every configuration — random dims, weights,
 duplicate coordinates, uneven prime part counts, padded-bucket tails —
-plus the resolved-once fallback chain, truthful compile-cache counters,
-and the fused whole-pipeline program (partition + match + score +
-select as ONE jitted program).  Property-style via seeded numpy RNG (no
+plus the device Hilbert kernel (Skilling's transpose, bit-identical to
+``orderings.hilbert_index`` + stable lexsort), the resolved-once
+fallback chain, truthful compile-cache counters, and the fused
+whole-pipeline program (partition + match + score + select as ONE
+jitted program).  Property-style via seeded numpy RNG (no
 hypothesis dependency, matching tests/test_partition.py)."""
 
 import numpy as np
@@ -100,6 +102,80 @@ def test_padded_bucket_tails():
               partition_jax.PART_BUCKET_MIN + 1, 511, 513):
         coords = rng.normal(size=(n, 3))
         _assert_jax_equiv(coords, 32, "FZ", weights=rng.random(n))
+
+
+# ---------------------------------------------------------------------------
+# device Hilbert: Skilling's transpose as a batched jitted kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(12))
+def test_hilbert_device_bit_identity(seed):
+    """The device Hilbert state machine must reproduce the host
+    ``hilbert_index`` + stable-lexsort split exactly: random clouds and
+    duplicate-heavy integer grids (all-ties quantisation), dims 1-3,
+    weighted and unweighted cuts."""
+    rng = np.random.default_rng(500 + seed)
+    d = int(rng.integers(1, 4))
+    n = int(rng.integers(2, 400))
+    nparts = int(rng.integers(1, 48))
+    weights = rng.random(n) if seed % 3 == 0 else None
+    coords = rng.normal(size=(n, d))
+    if seed % 4 == 0:  # duplicate-heavy grid: the tie order is the test
+        coords = rng.integers(0, 4, size=(n, d)).astype(float)
+    a = order_points(coords, nparts, "H", backend="vectorized",
+                     weights=weights)
+    b = order_points(coords, nparts, "H", backend="jax", weights=weights)
+    assert np.array_equal(a, b), (
+        f"device Hilbert mismatch: d={d} n={n} nparts={nparts} "
+        f"weighted={weights is not None}")
+
+
+def test_hilbert_padded_bucket_tails():
+    """Hilbert shares the pow2 point buckets: counts straddling the
+    bucket boundary must keep padded tail slots out of the result."""
+    rng = np.random.default_rng(13)
+    for n in (partition_jax.PART_BUCKET_MIN - 1,
+              partition_jax.PART_BUCKET_MIN,
+              partition_jax.PART_BUCKET_MIN + 1, 511, 513):
+        coords = rng.normal(size=(n, 3))
+        w = rng.random(n)
+        a = order_points(coords, 16, "H", backend="vectorized", weights=w)
+        b = order_points(coords, 16, "H", backend="jax", weights=w)
+        assert np.array_equal(a, b), n
+
+
+def test_hilbert_batched_dim_order_candidates():
+    """Batched H folds the dim-order into per-candidate gathers (no host
+    pre-permutation): every row must equal the column-permuted
+    per-candidate oracle, all 3! permutations at once."""
+    import itertools
+
+    rng = np.random.default_rng(21)
+    coords = rng.normal(size=(200, 3))
+    dos = np.array(list(itertools.permutations(range(3))))
+    for weights in (None, rng.random(200)):
+        a = order_points_batched(coords, 12, "H", dim_orders=dos,
+                                 weights=weights, backend="vectorized")
+        b = order_points_batched(coords, 12, "H", dim_orders=dos,
+                                 weights=weights, backend="jax")
+        assert np.array_equal(a, b)
+        for i, p in enumerate(dos):
+            ref = order_points(coords[:, list(p)], 12, "H",
+                               weights=weights)
+            assert np.array_equal(b[i], ref), tuple(p)
+
+
+def test_hilbert_compile_cache_counters():
+    """H shares the keyed compile cache: one compile per (d, bits,
+    weighted, bucket); a second cloud in the same bucket must hit."""
+    partition_jax.reset_partition_cache()
+    rng = np.random.default_rng(17)
+    order_points(rng.normal(size=(100, 3)), 8, "H", backend="jax")
+    stats = partition_jax.partition_cache_stats()
+    assert stats == {"hits": 0, "misses": 1, "entries": 1}
+    order_points(rng.normal(size=(90, 3)), 12, "H", backend="jax")
+    stats = partition_jax.partition_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
 
 
 # ---------------------------------------------------------------------------
@@ -219,6 +295,25 @@ def test_fused_pipeline_matches_numpy(score_backend, objective):
     assert np.array_equal(base.task_to_proc, fused.task_to_proc)
     assert base.rotation == fused.rotation
     assert np.isclose(base.score, fused.score, rtol=1e-5)
+
+
+def test_fused_pipeline_hilbert_matches_numpy():
+    """sfc="H" engages the SAME fused program path: the device Hilbert
+    sweep feeds the inlined scorer and the winner is bit-identical to
+    the all-numpy pipeline."""
+    from repro.mapping.pipeline import MappingPipeline, PipelineConfig
+
+    graph, alloc = _mesh_problem()
+    base = MappingPipeline(PipelineConfig(sfc="H", rotations=4)
+                           ).map(graph, alloc)
+    pipe = MappingPipeline(PipelineConfig(
+        sfc="H", rotations=4, score_backend="jax",
+        partition_backend="jax"))
+    assert pipe._fused is not None
+    fused = pipe.map(graph, alloc)
+    assert fused.stats.get("fused") is True
+    assert np.array_equal(base.task_to_proc, fused.task_to_proc)
+    assert base.rotation == fused.rotation
 
 
 def test_fused_program_compiles_once():
