@@ -64,8 +64,10 @@ POLICY = {
                "near": {"quality_worst": 0.05}},
     "hier": {"exact": ["refine_monotone"],
              "near": {"wh_ratio": 0.05, "wh_ratio_sparse": 0.05,
-                      "points_ratio": 0.02},
-             "min_ratio": {"flat_vs_hier": 0.5}},
+                      "points_ratio": 0.02, "wh_ratio_d3": 0.05,
+                      "wh_ratio_d3_sparse": 0.05, "points_ratio_d3": 0.02,
+                      "points_ratio_d4": 0.02},
+             "min_ratio": {"flat_vs_hier": 0.5, "d3_vs_d2": 0.5}},
     "table1_orderings": {"exact": ["rows"],
                          "near": {"max_rel_err_vs_paper_ZFZMFZ": 0.10}},
     "minighost": {"near": {"lat_red_vs_default": 0.10,

@@ -2,24 +2,33 @@
 
 MiniGhost-style weak-scaling scenarios on a sparse-allocation Cray XK7:
 a 3D stencil with one task per core, mapped by the flat pipeline (one
-point per core) and the hierarchical subsystem
-(``PipelineConfig(hierarchy="node")``: coarsen to node-sized clusters,
-rotation-sweep at router granularity, monotone swap refinement, expand
-in intra-node SFC order).
+point per core) and the hierarchical subsystem at increasing depth
+(``PipelineConfig(hierarchy=HierarchySpec...)``):
+
+- depth 2 (``HierarchySpec.node()``): coarsen to node-sized clusters,
+  rotation-sweep at router granularity, monotone swap refinement,
+  expand in intra-node SFC order — PR 3's scheme;
+- depth 3 / depth 4 (``HierarchySpec.with_depth(n)``): additional
+  geometric grouping levels above the nodes — every level divides the
+  top sweep's point count by its arity; on the way down each group
+  expansion is repaired by the exact-delta intra-group polish and the
+  grouping levels run the sparse-QAP local search.
 
 Reported per scenario (and recorded by ``run.py --json`` for the bench
 trajectory): the flat/hier wall-clock ratio, the engine-pass point
-ratio (~cores_per_node x fewer points per sweep pass), and the
-hier/flat quality ratios (weighted_hops, latency_max).  Oracles
-asserted on every run:
+ratio per depth, the quality ratios (weighted_hops, latency_max) per
+depth, and the per-level point/cluster/polish breakdown from the
+schema-v2 ``stats["levels"]``.  Oracles asserted on every run:
 
-- hier partitions ~cores_per_node x fewer points per engine pass;
-- hier ``weighted_hops`` within 5% of (or better than) flat on BOTH
-  scenarios;
-- the refinement trajectory is monotone (never worsens the objective);
-- the expanded mapping is a core-level bijection.
+- hier partitions ~cores_per_node x fewer points per engine pass
+  (depth 2), and each added level divides the sweep points further;
+- depth-2 ``weighted_hops`` within 5% of (or better than) flat AND
+  depth-3 within 5% of (or better than) depth-2, on BOTH scenarios;
+- every refinement/polish trajectory is monotone at every level;
+- every expanded mapping is a core-level bijection.
 
-The speedup floor (>=4x end-to-end at 2^18 tasks, ISSUE 3) is enforced
+The speedup floors (flat/depth-2 >= 4x end-to-end at 2^18 tasks, ISSUE
+3; depth-3 at least matching depth-2 wall-clock, ISSUE 10) are enforced
 unless ``check_speed=False`` (the CI smoke pass runs tiny sizes where
 constant overheads dominate and only the oracles are meaningful).
 """
@@ -32,6 +41,7 @@ import numpy as np
 
 from repro.core import (Mapper, MapperConfig, evaluate, gemini_xk7,
                         sfc_allocation, stencil_graph)
+from repro.hier import HierarchySpec
 
 ROTATIONS = 8  # the MiniGhost benchmark's §4.3 search budget
 
@@ -39,6 +49,8 @@ SCENARIOS = (
     ("minighost", dict(nfragments=8, seed=0)),
     ("xk7_sparse", dict(nfragments=32, seed=3)),
 )
+
+DEPTHS = (3, 4)  # deep-hierarchy entries recorded alongside depth 2
 
 
 def _grid(n: int) -> tuple[int, int, int]:
@@ -57,14 +69,44 @@ def _machine(n: int, cores_per_node: int):
     return gemini_xk7(dims=rdims, cores_per_node=cores_per_node)
 
 
+def _assert_hier_invariants(name: str, res, n: int) -> None:
+    """Bijection + per-level monotone refinement/polish, any depth."""
+    assert np.array_equal(np.sort(res.task_to_proc), np.arange(n)), \
+        f"{name}: hierarchical mapping is not a core-level bijection"
+    for lv in res.stats["levels"]:
+        hist = [h[0] for h in lv.get("refine_history", [])]
+        assert all(b <= a + 1e-9 for a, b in zip(hist, hist[1:])), \
+            (f"{name}: level {lv['level']} refinement worsened the "
+             f"objective: {hist}")
+        if "polish_initial" in lv:
+            assert lv["polish_final"] <= lv["polish_initial"] + 1e-9, \
+                (f"{name}: level {lv['level']} polish worsened the "
+                 f"objective")
+
+
+def _level_summary(res) -> list:
+    """The per-level record the JSON trajectory keeps (points + what
+    each level's passes did)."""
+    return [{k: lv[k] for k in ("level", "name", "points", "clusters",
+                                "units", "refine_accepted")
+             if k in lv} | {k: lv[k] for k in ("polish_accepted",)
+                            if k in lv}
+            for lv in res.stats["levels"]]
+
+
 def run(n: int = 1 << 18, cores_per_node: int = 16, *,
         rotations: int = ROTATIONS, check_speed: bool = True,
-        speed_floor: float = 4.0, quiet: bool = False) -> dict:
+        speed_floor: float = 4.0, quiet: bool = False,
+        depths: tuple = DEPTHS) -> dict:
     machine = _machine(n, cores_per_node)
     graph = stencil_graph(_grid(n), torus=False)
     flat = Mapper(MapperConfig(sfc="FZ", shift=True, rotations=rotations))
     node = Mapper(MapperConfig(sfc="FZ", shift=True, rotations=rotations,
-                               hierarchy="node"))
+                               hierarchy=HierarchySpec.node()))
+    deep = {d: Mapper(MapperConfig(sfc="FZ", shift=True,
+                                   rotations=rotations,
+                                   hierarchy=HierarchySpec.with_depth(d)))
+            for d in depths}
 
     out: dict = {"n": n, "cores_per_node": cores_per_node,
                  "scenarios": {}}
@@ -89,11 +131,7 @@ def run(n: int = 1 << 18, cores_per_node: int = 16, *,
                     break
                 t_node = min(t_node, _timed(node)[0])
 
-        assert np.array_equal(np.sort(res_n.task_to_proc), np.arange(n)), \
-            f"{name}: hierarchical mapping is not a core-level bijection"
-        hist = [h[0] for h in res_n.stats["refine_history"]]
-        assert all(b <= a + 1e-9 for a, b in zip(hist, hist[1:])), \
-            f"{name}: refinement worsened the objective: {hist}"
+        _assert_hier_invariants(name, res_n, n)
 
         ev_f = evaluate(graph, alloc, res_f)
         ev_n = evaluate(graph, alloc, res_n)
@@ -108,7 +146,7 @@ def run(n: int = 1 << 18, cores_per_node: int = 16, *,
             (f"{name}: engine-pass point ratio {points_ratio:.1f} below "
              f"~{cores_per_node}x (hier must partition ~cores_per_node x "
              f"fewer points)")
-        out["scenarios"][name] = {
+        rec = {
             "t_flat_s": t_flat, "t_node_s": t_node,
             "speedup": t_flat / max(t_node, 1e-9),
             "points_ratio": points_ratio,
@@ -117,12 +155,47 @@ def run(n: int = 1 << 18, cores_per_node: int = 16, *,
             "wh_node": ev_n["weighted_hops"],
             "refine_accepted": res_n.stats["refine_accepted"],
         }
+
+        # -- deep hierarchies: depth-3 must MATCH depth-2 wall-clock
+        # while staying within 5% quality; depth-4 is recorded for the
+        # trajectory (its sweep shrinks another arity x) --------------
+        for d in depths:
+            t_d, res_d = _timed(deep[d])
+            if d == 3 and check_speed:
+                t_d = min(t_d, _timed(deep[d])[0])
+                for _ in range(3):
+                    if t_node / t_d >= 1.0:
+                        break
+                    t_d = min(t_d, _timed(deep[d])[0])
+            _assert_hier_invariants(f"{name}-depth{d}", res_d, n)
+            ev_d = evaluate(graph, alloc, res_d)
+            wh_vs_d2 = ev_d["weighted_hops"] / ev_n["weighted_hops"]
+            if d == 3:
+                assert wh_vs_d2 <= 1.05, \
+                    (f"{name}: depth-3 weighted_hops {wh_vs_d2:.3f}x "
+                     f"depth-2 exceeds the 5% budget")
+            rec[f"t_d{d}_s"] = t_d
+            rec[f"d{d}_vs_d2"] = t_node / max(t_d, 1e-9)
+            rec[f"wh_ratio_d{d}"] = (ev_d["weighted_hops"]
+                                     / ev_f["weighted_hops"])
+            rec[f"wh_d{d}_vs_d2"] = wh_vs_d2
+            rec[f"points_ratio_d{d}"] = (res_f.stats["sweep_points"]
+                                         / res_d.stats["sweep_points"])
+            rec[f"levels_d{d}"] = _level_summary(res_d)
+        if check_speed:
+            assert rec["d3_vs_d2"] >= 1.0, \
+                (f"{name}: depth-3 wall-clock {rec['d3_vs_d2']:.2f}x "
+                 f"depth-2 — must at least match it at n={n}")
+
+        out["scenarios"][name] = rec
         if not quiet:
-            s = out["scenarios"][name]
-            print(f"[hier] {name}: flat {t_flat:.2f}s / node "
-                  f"{t_node:.2f}s ({s['speedup']:.1f}x), wh_ratio "
-                  f"{wh_ratio:.3f}, lat_ratio {lat_ratio:.3f}, "
-                  f"points {points_ratio:.0f}x fewer")
+            print(f"[hier] {name}: flat {t_flat:.2f}s / d2 "
+                  f"{t_node:.2f}s ({rec['speedup']:.1f}x) / d3 "
+                  f"{rec['t_d3_s']:.2f}s (d3_vs_d2 "
+                  f"{rec['d3_vs_d2']:.2f}x), wh_ratio {wh_ratio:.3f}, "
+                  f"wh_ratio_d3 {rec['wh_ratio_d3']:.3f}, points "
+                  f"{points_ratio:.0f}x / {rec['points_ratio_d3']:.0f}x "
+                  f"fewer")
 
     first = out["scenarios"][SCENARIOS[0][0]]
     if check_speed:
@@ -141,6 +214,11 @@ def headline(results: dict) -> str:
             f"wh_ratio={first['wh_ratio']:.4f};"
             f"wh_ratio_sparse={second['wh_ratio']:.4f};"
             f"lat_ratio={first['lat_ratio']:.4f};"
+            f"d3_vs_d2={first['d3_vs_d2']:.2f}x;"
+            f"wh_ratio_d3={first['wh_ratio_d3']:.4f};"
+            f"wh_ratio_d3_sparse={second['wh_ratio_d3']:.4f};"
+            f"points_ratio_d3={first['points_ratio_d3']:.1f};"
+            f"points_ratio_d4={first['points_ratio_d4']:.1f};"
             f"refine_monotone=1")
 
 

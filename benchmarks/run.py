@@ -624,7 +624,7 @@ def main() -> None:
         jax partition backend: the device Hilbert state machine
         (Skilling's transpose) feeds the fused program, and the winner
         must be bit-identical to the all-numpy Hilbert oracle.  Part 2
-        — ``hierarchy="node"``: the bounded greedy swap refinement
+        — node-level hierarchy: the bounded greedy swap refinement
         folds into the SAME compiled program; the refine trajectory
         must equal the host ``refine_swaps`` decision-for-decision
         (monotone), and the fused compile-cache counters must show one
@@ -644,7 +644,8 @@ def main() -> None:
         from repro.core import (block_allocation, gemini_xk7,
                                 logical_mesh_graph, sfc_allocation,
                                 stencil_graph, tpu_v5e_pod)
-        from repro.mapping import MappingPipeline, PipelineConfig
+        from repro.mapping import (HierarchySpec, MappingPipeline,
+                                   PipelineConfig)
         from repro.meshmap.device_mesh import select_mapping
 
         on_tpu = jax.default_backend() == "tpu"
@@ -689,7 +690,8 @@ def main() -> None:
         g = stencil_graph((1 << (e - 2 * a), 1 << a, 1 << a))
         m2 = gemini_xk7(dims=dims, cores_per_node=cores)
         alloc2 = sfc_allocation(m2, n, nfragments=2, seed=3)
-        kw = dict(sfc="H", rotations=6, hierarchy="node")
+        kw = dict(sfc="H", rotations=6,
+                  hierarchy=HierarchySpec.node())
         pipe_jx = MappingPipeline(PipelineConfig(
             partition_backend="jax", score_backend=sb, **kw))
 
@@ -778,14 +780,17 @@ def main() -> None:
     def hier_bench():
         """Flat vs hierarchical (coarsen -> map -> refine) engine.
 
-        Runs both sparse-XK7 scenarios of benchmarks/hier.py; every
-        pass asserts the quality (within 5% of flat), monotone
-        refinement and ~cores_per_node x engine-pass point reduction
-        oracles.  The >=4x end-to-end speedup floor (ISSUE 3) is
-        enforced at 2^18+ tasks — ``--smoke`` runs 2^14 tasks where
-        constant overheads dominate, so only the oracles run there.
-        The ``flat_vs_hier`` derived field lands in the JSON records
-        so the bench trajectory tracks mapping-engine scaling.
+        Runs both sparse-XK7 scenarios of benchmarks/hier.py at depth
+        2, 3 and 4; every pass asserts the quality budgets (depth-2
+        within 5% of flat, depth-3 within 5% of depth-2), monotone
+        refinement/polish at every level, core-level bijection and the
+        per-level engine-pass point reduction oracles.  The speed
+        floors (>=4x flat vs depth-2, ISSUE 3; depth-3 at least
+        matching depth-2 wall-clock, ISSUE 10) are enforced at 2^18+
+        tasks — ``--smoke`` runs 2^14 tasks where constant overheads
+        dominate, so only the oracles run there.  The ``flat_vs_hier``
+        / ``d3_vs_d2`` / ``wh_ratio_d3`` derived fields land in the
+        JSON records so the bench trajectory tracks engine scaling.
         """
         if args.full:
             hier.main()  # 2^20 tasks / 64K+ allocated nodes

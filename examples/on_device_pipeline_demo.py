@@ -13,7 +13,7 @@ cache entry that repeat calls hit.
 
 The second half demos the ISSUE-9 cold path: ``sfc="H"`` swaps the
 device Hilbert state machine (Skilling's transpose) into the same
-fused program, and ``hierarchy="node"`` folds the bounded greedy swap
+fused program, and a node-level ``HierarchySpec`` folds the greedy swap
 refinement into it too — coarse sweep + refinement, one compile, the
 refine trajectory bit-identical to the host ``refine_swaps``.
 
@@ -69,7 +69,8 @@ def main() -> None:
     # a rotation sweep mapped directly through the pipeline: with a
     # device partitioner AND a device scorer the whole sweep is one
     # fused program — stats carry the attribution
-    from repro.mapping import MappingPipeline, PipelineConfig
+    from repro.mapping import (HierarchySpec, MappingPipeline,
+                           PipelineConfig)
 
     pipe = MappingPipeline(PipelineConfig(
         rotations=8, partition_backend="jax", score_backend="jax"))
@@ -93,11 +94,12 @@ def main() -> None:
     print(f"Hilbert sweep on device: fused={hj.stats['fused']}, winner "
           f"bit-identical to the host Hilbert pipeline: True")
 
-    # ... and the one-program cold path: hierarchy="node" folds the
+    # ... and the one-program cold path: a node-level HierarchySpec
+    # folds the
     # swap refinement into the SAME compiled program (coarse Hilbert
     # sweep + propose/delta-score/apply rounds, early exit), with the
     # refine trajectory bit-identical to the host refine_swaps.
-    kw = dict(sfc="H", rotations=8, hierarchy="node")
+    kw = dict(sfc="H", rotations=8, hierarchy=HierarchySpec.node())
     rj = MappingPipeline(PipelineConfig(
         partition_backend="jax", score_backend="jax", **kw)
     ).map(graph, alloc)

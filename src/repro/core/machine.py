@@ -60,6 +60,20 @@ class Machine:
     def nnodes(self) -> int:
         return int(np.prod(self.dims))
 
+    @property
+    def network_ndim(self) -> int:
+        """Network (router) dimensions — ``ndim`` minus the core dims."""
+        return self.ndim - self.core_dims
+
+    @property
+    def cores_per_node(self) -> int:
+        """Cores sharing one router (product of the core dims; 1 when
+        the machine has none).  The node-level arity that
+        :meth:`repro.hier.HierarchySpec.from_machine` derives."""
+        if not self.core_dims:
+            return 1
+        return int(np.prod(self.dims[self.network_ndim:]))
+
     def bw(self, dim: int, index: np.ndarray | int):
         pat = self.link_bw[dim]
         return pat[np.asarray(index) % len(pat)]

@@ -122,11 +122,14 @@ class MapperConfig:
                      for the whole sweep; "loop" = per-candidate oracle).
     score_backend  : candidate scoring engine ("numpy", "jax" or
                      "pallas"; silent pallas -> jax -> numpy fallback).
-    hierarchy      : "flat" (one point per core, classic) or "node"
-                     (coarsen -> map at router granularity -> refine;
-                     :mod:`repro.hier`).
-    refine_rounds / refine_top / refine_degree : bounds of the node-
-                     level swap refinement (hierarchy="node" only).
+    hierarchy      : a :class:`repro.hier.HierarchySpec` (ordered
+                     coarsening levels with per-level refine budgets;
+                     ``HierarchySpec.flat()`` / ``.node()`` /
+                     ``.with_depth(n)``); the legacy "flat"/"node"
+                     strings are deprecated aliases.
+    refine_rounds / refine_top / refine_degree : DEPRECATED flat
+                     refinement knobs — non-None values fold into every
+                     spec level with a DeprecationWarning.
     """
 
     sfc: str = "FZ"
@@ -144,10 +147,14 @@ class MapperConfig:
     fused: str = "auto"
     sweep: str = "batched"
     score_backend: str = "numpy"
-    hierarchy: str = "flat"
-    refine_rounds: int = 2
-    refine_top: int = 64
-    refine_degree: int = 4
+    hierarchy: object = "flat"
+    refine_rounds: int | None = None
+    refine_top: int | None = None
+    refine_degree: int | None = None
+
+    def __post_init__(self):
+        from repro.hier.spec import normalize_config_hierarchy
+        normalize_config_hierarchy(self)
 
 
 class Mapper:
@@ -160,9 +167,12 @@ class Mapper:
     def __init__(self, config: MapperConfig | None = None):
         from repro.mapping.pipeline import MappingPipeline, PipelineConfig
         self.config = config or MapperConfig()
+        # shallow per-field forwarding (NOT dataclasses.asdict, which
+        # would deep-convert the nested HierarchySpec into plain dicts)
+        kw = {f.name: getattr(self.config, f.name)
+              for f in dataclasses.fields(self.config)}
         self.pipeline = MappingPipeline(PipelineConfig(
-            objective="weighted_hops",
-            **dataclasses.asdict(self.config)))
+            objective="weighted_hops", **kw))
 
     def machine_coords(self, alloc: Allocation) -> np.ndarray:
         """Machine-side transform stage (see MappingPipeline)."""

@@ -14,9 +14,10 @@ Canonicalisation rules (what is — and is not — part of the identity):
   affects the mapping;
 - ``Machine.name`` is EXCLUDED — it is a report label; two machines with
   the same dims/wrap/bandwidths/core-dims are the same network;
-- dataclass configs (``PipelineConfig`` & co) hash their canonical-JSON
-  ``dataclasses.asdict`` form, so tuple/list spelling differences do not
-  split the cache.
+- dataclass configs (``PipelineConfig`` & co) hash a canonical-JSON
+  field-by-field form (nested dataclasses such as ``HierarchySpec``
+  keep their own type tag), so tuple/list spelling differences or the
+  construction path of an equal spec do not split the cache.
 
 The digest is SHA-1 truncated to 128 bits.  Signatures are CACHE KEYS,
 not a security boundary — SHA-1 is the fastest (hardware-accelerated)
@@ -76,8 +77,15 @@ def _canonical(obj):
         f = float(obj)
         return f if np.isfinite(f) else repr(f)
     if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        # recurse FIELD BY FIELD (not dataclasses.asdict, which
+        # deep-converts nested dataclasses to anonymous dicts): a
+        # nested config value — e.g. PipelineConfig.hierarchy holding a
+        # HierarchySpec — keeps its own ``__dataclass__`` tag, so two
+        # structurally-different specs can never canonicalise to the
+        # same key by field coincidence
         return {"__dataclass__": type(obj).__name__,
-                **_canonical(dataclasses.asdict(obj))}
+                **_canonical({f.name: getattr(obj, f.name)
+                              for f in dataclasses.fields(obj)})}
     return obj
 
 

@@ -21,11 +21,12 @@ there is exactly one rotation/candidate-search loop in the codebase.
 """
 
 from .candidates import Candidate, CandidateSearch, rotation_candidates
-from .pipeline import (MappingPipeline, MappingResult, PipelineConfig,
-                       match_parts, shared_pipeline)
+from .pipeline import (HierarchySpec, Level, MappingPipeline,
+                       MappingResult, PipelineConfig, match_parts,
+                       shared_pipeline)
 
 __all__ = [
-    "Candidate", "CandidateSearch", "MappingPipeline", "MappingResult",
-    "PipelineConfig", "match_parts", "rotation_candidates",
-    "shared_pipeline",
+    "Candidate", "CandidateSearch", "HierarchySpec", "Level",
+    "MappingPipeline", "MappingResult", "PipelineConfig", "match_parts",
+    "rotation_candidates", "shared_pipeline",
 ]

@@ -39,6 +39,8 @@ from repro.core.orderings import (order_points, order_points_batched,
                                   resolve_partition_backend)
 from repro.core.transforms import (apply_permutation, box_lift, drop_dims,
                                    scale_by_bandwidth, shift_torus)
+from repro.hier.spec import (HierarchySpec, Level,
+                             normalize_config_hierarchy)
 from repro.mapping.candidates import CandidateSearch, rotation_candidates
 
 
@@ -94,14 +96,23 @@ class PipelineConfig:
                   the pallas -> jax -> numpy chain.
 
     Hierarchy stage (:mod:`repro.hier`):
-      hierarchy : "flat" partitions one point per core (classic);
-                  "node" coarsens tasks into node-sized clusters and
-                  runs the rotation sweep at router granularity
-                  (~cores_per_node x fewer points per engine pass),
-                  then refines with bounded greedy inter-node swaps.
-      refine_rounds / refine_top / refine_degree : bounds of the swap
-                  refinement (rounds, hottest clusters considered per
-                  round, nearest routers proposed per cluster).
+      hierarchy : a :class:`repro.hier.HierarchySpec` — ordered
+                  coarsening levels (fine -> coarse), each with its own
+                  arity and refinement budget.  ``HierarchySpec.flat()``
+                  partitions one point per core (classic);
+                  ``HierarchySpec.node()`` coarsens tasks into
+                  node-sized clusters and sweeps at router granularity
+                  (~cores_per_node x fewer points per engine pass);
+                  ``HierarchySpec.with_depth(n)`` adds geometric
+                  grouping levels above the node level, each dividing
+                  the top-sweep point count by its arity and refining
+                  on the way down.  The legacy strings "flat"/"node"
+                  are accepted as deprecated aliases (normalised to
+                  the equivalent spec with one DeprecationWarning).
+      refine_rounds / refine_top / refine_degree : DEPRECATED — the old
+                  flat refinement knobs.  When set (non-None) they fold
+                  into every level of the spec and warn; use the
+                  per-level ``Level`` budgets instead.
     """
 
     sfc: str = "FZ"
@@ -120,10 +131,13 @@ class PipelineConfig:
     objective: str | tuple = "weighted_hops"
     sweep: str = "batched"
     score_backend: str = "numpy"
-    hierarchy: str = "flat"
-    refine_rounds: int = 2
-    refine_top: int = 64
-    refine_degree: int = 4
+    hierarchy: HierarchySpec | str = "flat"
+    refine_rounds: int | None = None
+    refine_top: int | None = None
+    refine_degree: int | None = None
+
+    def __post_init__(self):
+        normalize_config_hierarchy(self)
 
 
 # Process-wide pipeline registry: one MappingPipeline per distinct
@@ -365,15 +379,17 @@ class MappingPipeline:
         the partitioner, batched scoring; returns the best MappingResult
         (score = objective).
 
-        ``hierarchy="node"`` routes through :mod:`repro.hier` instead:
-        coarsen tasks to node-sized clusters, run the SAME rotation
-        sweep at router granularity, refine with bounded greedy
-        inter-node swaps, expand to cores in intra-node SFC order.
+        A non-flat :class:`HierarchySpec` routes through
+        :mod:`repro.hier` instead: coarsen tasks level by level, run
+        the SAME rotation sweep at the TOP granularity, then expand
+        downward one level at a time with a refinement pass per level.
         """
         cfg = self.config
-        if cfg.hierarchy not in ("flat", "node"):
-            raise ValueError(f"unknown hierarchy {cfg.hierarchy!r}")
-        if cfg.hierarchy == "node":
+        if not isinstance(cfg.hierarchy, HierarchySpec):
+            # configs are validated at construction; this only fires
+            # when a caller mutates cfg.hierarchy afterwards
+            normalize_config_hierarchy(cfg)
+        if not cfg.hierarchy.is_flat:
             from repro.hier.levels import map_hierarchical
             return map_hierarchical(self, graph, alloc,
                                     task_coords=task_coords,
@@ -419,9 +435,25 @@ class MappingPipeline:
                         best.score = float(scores[best_i][0])
                 timings["score_s"] = sp.duration_s
         timings["total_s"] = root.duration_s
-        best.stats.update(hierarchy="flat",
-                          sweep_points=sweep_points,
-                          partition_backend=self.partition_backend,
-                          timings=timings,
-                          trace_id=root.trace_id)
+        # stats schema v2: ONE per-level entry per mapped granularity
+        # (flat = the single core level), replacing the ad-hoc
+        # flat/hier key split; the legacy keys (hierarchy /
+        # sweep_points / timings) stay derived for one release — see
+        # README "MappingResult.stats schema"
+        map_s = timings.get(
+            "fused_s",
+            timings.get("partition_s", 0.0) + timings.get("score_s", 0.0))
+        best.stats.update(
+            schema=2,
+            hierarchy="flat",
+            depth=1,
+            levels=[{"level": 0, "name": "core",
+                     "points": sweep_points,
+                     "clusters": int(len(tc)), "units": int(alloc.n),
+                     "coarsen_s": 0.0, "map_s": map_s, "refine_s": 0.0,
+                     "refine_accepted": 0, "refine_evaluated": 0}],
+            sweep_points=sweep_points,
+            partition_backend=self.partition_backend,
+            timings=timings,
+            trace_id=root.trace_id)
         return best

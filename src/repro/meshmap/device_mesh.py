@@ -60,7 +60,7 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
                   rotations: int = 16, return_report: bool = False,
                   score_backend: str = "numpy",
                   partition_backend: str = "numpy",
-                  hierarchy: str = "flat", sfc: str = "FZ", service=None):
+                  hierarchy="flat", sfc: str = "FZ", service=None):
     """Build a Mesh whose device order minimises modeled link traffic.
 
     Candidate-selection (the paper's §4.3 rotation search, generalised):
@@ -104,7 +104,7 @@ def topology_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...],
 def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
                    score_backend: str = "numpy",
                    partition_backend: str = "numpy",
-                   hierarchy: str = "flat", sfc: str = "FZ",
+                   hierarchy="flat", sfc: str = "FZ",
                    service=None):
     """Candidate search: default order + SFC-geometric mappings (``sfc``
     picks the part numbering — "FZ" is the paper's winner, "H" the
@@ -132,11 +132,14 @@ def select_mapping(graph, alloc, axis_bytes, *, rotations: int = 16,
     (:mod:`repro.mapping.fused`) — the cold-path win the ``end2end``
     benchmark guards.
 
-    ``hierarchy="node"`` routes each pipeline call through the
-    hierarchical coarsen -> map -> refine subsystem (:mod:`repro.hier`)
-    — worthwhile on machines with core dims or very large logical
-    meshes; on a machine without core dims it degenerates to the
-    router-granularity map plus the monotone swap refinement.
+    ``hierarchy`` takes a :class:`repro.hier.HierarchySpec`
+    (``HierarchySpec.node()``, ``.with_depth(3)``, ``.from_machine``;
+    the strings "flat"/"node" remain deprecated aliases) and routes
+    each pipeline call through the recursive coarsen* -> map ->
+    refine/expand* subsystem (:mod:`repro.hier`) — worthwhile on
+    machines with core dims or very large logical meshes; on a machine
+    without core dims depth 2 degenerates to the router-granularity map
+    plus the monotone swap refinement.
 
     Pipelines come from the process-wide :func:`shared_pipeline`
     registry (evaluator + compile caches resolved once per config, not

@@ -28,8 +28,8 @@ with the cache), ``signature``, ``status`` (cold/warm/coalesced) and
 The cold path is RESILIENT (ISSUE 7, :mod:`repro.serve.resilience`):
 a failed or deadline-exceeded pipeline pass walks the degradation
 ladder one rung down (fused -> unfused, pallas -> jax -> numpy scoring,
-jax -> numpy partitioning, refine rounds -> 0) instead of surfacing the
-error, per-rung circuit breakers skip known-bad backends outright, a
+jax -> numpy partitioning, hierarchy depth -> 2, refine rounds -> 0)
+instead of surfacing the error, per-rung circuit breakers skip known-bad backends outright, a
 bounded admission queue sheds overload, and the served rung lands in
 ``MappingResult.stats["degraded"]`` plus the service counters
 (:meth:`MappingService.stats`).  Errors never enter the result LRU, and
@@ -124,8 +124,13 @@ def make_request(graph, alloc, objective="wh", *, config=None,
     ``objective`` accepts an alias from :data:`OBJECTIVES`, a metric
     key, or a tuple of keys (lexicographic).  ``overrides`` are
     :class:`PipelineConfig` fields (``rotations=8``,
-    ``hierarchy="node"``, ...); pass ``config`` to supply a full config
-    instead (mutually exclusive with ``objective``/``overrides``).
+    ``hierarchy=HierarchySpec.node()``, ...); pass ``config`` to supply
+    a full config instead (mutually exclusive with
+    ``objective``/``overrides``).  Config validation happens at
+    CONSTRUCTION — an unknown hierarchy raises a 4xx-style
+    ``ValueError`` (listing the accepted values) here, before the
+    request is ever admitted to the service or burns a
+    degradation-ladder rung.
     """
     if config is None:
         config = PipelineConfig(

@@ -27,22 +27,29 @@ upgrades resolved-once to **resolved-with-health**:
   4. ``score_numpy``     : accelerator scoring -> the numpy reference.
   5. ``partition_numpy`` : device partition sweep -> the host
                            vectorized engine.
-  6. ``refine_0``        : hierarchical refine rounds -> 0 (skip the
-                           swap-refinement scoring loop entirely).
+  6. ``depth_2``         : deep hierarchies (``HierarchySpec`` depth
+                           > 2) truncate to the classic two-level
+                           node scheme — fewer coarsen/refine passes,
+                           no grouping-level QAP search.
+  7. ``refine_0``        : every level's refine AND polish rounds -> 0
+                           (skip the swap/QAP/polish scoring loops
+                           entirely).
 
   Rungs that do not apply to a config (numpy-only configs, flat
-  hierarchy) are elided; the FIRST rung is always the unmodified
-  config and the LAST rung of every non-trivial ladder runs entirely
-  on host numpy.
+  hierarchy, depth <= 2) are elided; the FIRST rung is always the
+  unmodified config and the LAST rung of every non-trivial ladder runs
+  entirely on host numpy.
 
   **Quality bound:** rungs 2-5 only move WHERE the same algorithm runs
   — the repo's backend-equivalence guarantees (bit-identity oracles in
   tests/benchmarks) make their permutations bit-identical to the
-  healthy path, so the objective score is unchanged.  Only
-  ``refine_0`` can change the result: it forfeits the (monotone)
-  greedy swap-refinement improvement, i.e. the degraded score is at
-  worst the UNREFINED hierarchical score — within 5% of flat on the
-  benchmark suite (the ``hier`` entry's ``wh_ratio`` guard).
+  healthy path, so the objective score is unchanged.  Only the depth
+  rungs change the result: ``depth_2`` trades the deep hierarchy's
+  speed for the well-characterised two-level quality, and
+  ``refine_0`` forfeits the (monotone) refinement improvement, i.e.
+  the degraded score is at worst the UNREFINED hierarchical score —
+  within 5% of flat on the benchmark suite (the ``hier`` entry's
+  ``wh_ratio`` guard).
 
 :class:`MappingService` (:mod:`repro.serve.engine`) walks the ladder on
 failure or deadline expiry and records the rung that served the
@@ -208,8 +215,12 @@ def rung_key(config: PipelineConfig) -> str:
     part = resolve_partition_backend(config.partition_backend)
     parts = ["fused" if fused_candidate(config) else "staged",
              f"score={score}", f"partition={part}"]
-    if config.hierarchy == "node":
-        parts.append(f"refine={config.refine_rounds}")
+    spec = config.hierarchy
+    if not spec.is_flat:
+        # depth + total refine budget: a depth-degraded or refine-
+        # stripped config is a DIFFERENT rung with its own breaker
+        parts.append(f"depth={spec.depth}")
+        parts.append(f"refine={spec.refine_rounds_total}")
     return "/".join(parts)
 
 
@@ -238,6 +249,14 @@ def degradation_ladder(config: PipelineConfig) -> list:
         push(f"score_{backend}", score_backend=backend)
     if config.partition_backend != "numpy":
         push("partition_numpy", partition_backend="numpy")
-    if config.hierarchy == "node" and config.refine_rounds > 0:
-        push("refine_0", refine_rounds=0)
+    # hierarchy-depth degradation: hierarchy is a normalized
+    # HierarchySpec here, so the rungs are built with its own
+    # combinators (never the deprecated legacy kwargs)
+    spec = cur.hierarchy
+    if spec.depth > 2:
+        push("depth_2", hierarchy=spec.truncated(2))
+    spec = cur.hierarchy
+    if not spec.is_flat and (spec.refine_rounds_total > 0
+                             or spec.polish_rounds_total > 0):
+        push("refine_0", hierarchy=spec.with_refine(rounds=0, polish=0))
     return rungs

@@ -14,7 +14,10 @@ instead of hand-rolling graph/allocation builders per caller.  A
                   fat_tree (three-level tree approximated as a
                   non-wrapping grid with per-level bandwidth taper +
                   an intra-node core dim)
-    hierarchy   : flat | node (PR 3's coarsen -> map -> refine)
+    hierarchy   : flat | node (PR 3's two-level coarsen -> map ->
+                  refine) | depth3 (the recursive N-level hierarchy of
+                  :class:`repro.hier.HierarchySpec` with one grouping
+                  level above the nodes)
     objective   : wh (WeightedHops) | latency (Latency, WeightedHops)
 
 and everything it builds is a pure function of ``(scale, seed)`` — the
@@ -33,12 +36,12 @@ import numpy as np
 from repro.core import (Allocation, TaskGraph, bgq, block_allocation,
                         cube_sphere_graph, gemini_xk7, make_machine,
                         sfc_allocation, stencil_graph, tpu_v5e_pod)
-from repro.mapping import PipelineConfig
+from repro.mapping import HierarchySpec, PipelineConfig
 from repro.serve.engine import OBJECTIVES, MappingRequest
 
 WORKLOADS = ("minighost", "homme", "random")
 ALLOCATIONS = ("xk7_sparse", "bgq_block", "tpu_mesh", "fat_tree")
-HIERARCHIES = ("flat", "node")
+HIERARCHIES = ("flat", "node", "depth3")
 OBJECTIVE_KEYS = ("wh", "latency")
 
 DEFAULT_SCALE = 4096  # target task count (builders may round, see below)
@@ -202,10 +205,14 @@ class Scenario:
         return _ALLOCS[self.allocation](graph.n, self.seed)
 
     def config(self) -> PipelineConfig:
+        # resolve the registry's hierarchy tag through the structured
+        # spec constructor (the supported API) — never the deprecated
+        # string aliases, so scenario configs are warning-free
         return PipelineConfig(sfc="FZ", shift=True,
                               rotations=self.rotations,
                               objective=OBJECTIVES[self.objective],
-                              hierarchy=self.hierarchy)
+                              hierarchy=HierarchySpec.from_string(
+                                  self.hierarchy))
 
     def request(self) -> MappingRequest:
         """The scenario as a serve-layer request (deterministic: same

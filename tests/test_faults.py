@@ -17,7 +17,8 @@ import numpy as np
 import pytest
 
 from repro import faults
-from repro.mapping import PipelineConfig, shared_pipeline
+from repro.mapping import (HierarchySpec, PipelineConfig,
+                           shared_pipeline)
 from repro.serve import (MappingService, ServiceOverloaded, get_scenario,
                          degradation_ladder, rung_key)
 from repro.serve.resilience import BreakerBoard, CircuitBreaker
@@ -221,16 +222,32 @@ def test_ladder_full_accelerator_config():
     if not _has_jax():
         pytest.skip("jax unavailable")
     cfg = PipelineConfig(score_backend="pallas", partition_backend="jax",
-                        rotations=4, hierarchy="node")
+                        rotations=4, hierarchy=HierarchySpec.node())
     names = [n for n, _ in degradation_ladder(cfg)]
     assert names == ["full", "unfused", "score_jax", "score_numpy",
                      "partition_numpy", "refine_0"]
     # cumulative: the terminal rung is all-host with zero refine rounds
     last = degradation_ladder(cfg)[-1][1]
-    assert (last.score_backend, last.partition_backend,
-            last.fused, last.refine_rounds) == ("numpy", "numpy", "off", 0)
+    assert (last.score_backend, last.partition_backend, last.fused,
+            last.hierarchy.refine_rounds_total) == ("numpy", "numpy",
+                                                    "off", 0)
     # the first rung is the caller's config, untouched
     assert degradation_ladder(cfg)[0][1] is cfg
+
+
+def test_ladder_deep_hierarchy_gets_depth_rung():
+    """depth > 2 configs degrade through the classic two-level scheme
+    BEFORE shedding refinement entirely."""
+    cfg = PipelineConfig(rotations=4,
+                         hierarchy=HierarchySpec.with_depth(3))
+    names = [n for n, _ in degradation_ladder(cfg)]
+    assert names[-2:] == ["depth_2", "refine_0"]
+    d2 = dict(degradation_ladder(cfg))["depth_2"]
+    assert d2.hierarchy.depth == 2
+    assert d2.hierarchy.levels == cfg.hierarchy.levels[:1]
+    last = degradation_ladder(cfg)[-1][1]
+    assert last.hierarchy.depth == 2
+    assert last.hierarchy.refine_rounds_total == 0
 
 
 def test_ladder_jax_score_only():

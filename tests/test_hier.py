@@ -17,7 +17,8 @@ from repro.core.machine import Allocation
 from repro.core.metrics import evaluate_candidates
 from repro.hier import (aggregate_tasks, assign_cores, refine_swaps,
                         router_view)
-from repro.mapping import MappingPipeline, PipelineConfig
+from repro.mapping import (HierarchySpec, MappingPipeline,
+                           PipelineConfig)
 
 
 def _grid(n):
@@ -115,7 +116,7 @@ def test_hier_bijection_and_quality_vs_flat():
     m, alloc, g = _xk7_case()
     flat = Mapper(MapperConfig(sfc="FZ", shift=True, rotations=8))
     node = Mapper(MapperConfig(sfc="FZ", shift=True, rotations=8,
-                               hierarchy="node"))
+                               hierarchy=HierarchySpec.node()))
     rf, rn = flat.map(g, alloc), node.map(g, alloc)
     assert np.array_equal(np.sort(rn.task_to_proc), np.arange(g.n))
     ef, en = evaluate(g, alloc, rf), evaluate(g, alloc, rn)
@@ -127,7 +128,7 @@ def test_hier_bijection_and_quality_vs_flat():
 def test_hier_point_reduction_matches_cores_per_node():
     m, alloc, g = _xk7_case()
     flat = Mapper(MapperConfig(sfc="FZ")).map(g, alloc)
-    node = Mapper(MapperConfig(sfc="FZ", hierarchy="node")).map(g, alloc)
+    node = Mapper(MapperConfig(sfc="FZ", hierarchy=HierarchySpec.node())).map(g, alloc)
     assert flat.stats["sweep_points"] == 2 * g.n
     assert node.stats["sweep_points"] == 2 * g.n // 16
     assert flat.stats["sweep_points"] / node.stats["sweep_points"] == 16
@@ -139,7 +140,7 @@ def test_coarse_score_equals_fine_weighted_hops():
     """Every task carries its node's router coordinates, so the
     contracted graph's weighted_hops is EXACTLY the fine mapping's."""
     m, alloc, g = _xk7_case(nfragments=2, seed=5)
-    rn = Mapper(MapperConfig(sfc="FZ", hierarchy="node")).map(g, alloc)
+    rn = Mapper(MapperConfig(sfc="FZ", hierarchy=HierarchySpec.node())).map(g, alloc)
     fine = evaluate(g, alloc, rn)["weighted_hops"]
     assert rn.score == rn.stats["refine_final"] == fine
 
@@ -165,7 +166,7 @@ def test_hier_machine_without_core_dims():
     m = make_machine((16, 16), wrap=True)
     alloc = sfc_allocation(m, 64, nfragments=4, seed=7)
     g = stencil_graph((8, 8))
-    res = MappingPipeline(PipelineConfig(hierarchy="node")).map(g, alloc)
+    res = MappingPipeline(PipelineConfig(hierarchy=HierarchySpec.node())).map(g, alloc)
     assert np.array_equal(np.sort(res.task_to_proc), np.arange(64))
     base = evaluate(g, alloc, identity_mapping(g, alloc))
     assert evaluate(g, alloc, res)["weighted_hops"] \
@@ -176,7 +177,7 @@ def test_hier_fewer_tasks_than_nodes():
     m = gemini_xk7(dims=(8, 4, 4), cores_per_node=16)
     alloc = sfc_allocation(m, 64 * 16, seed=0)  # 64 routers
     g = stencil_graph((16, 16))  # 256 tasks -> 16 clusters of 16
-    res = MappingPipeline(PipelineConfig(hierarchy="node")).map(g, alloc)
+    res = MappingPipeline(PipelineConfig(hierarchy=HierarchySpec.node())).map(g, alloc)
     assert res.stats["nclusters"] == 16
     procs = np.unique(res.task_to_proc)
     assert len(procs) == 256  # distinct cores (16 routers x 16 cores)
@@ -191,7 +192,7 @@ def test_hier_bijection_with_uneven_router_core_counts():
     m = gemini_xk7(dims=(4, 4, 4), cores_per_node=16)
     alloc = sfc_allocation(m, 100, seed=0)  # 6 full routers + 4 cores
     g = stencil_graph((10, 10))
-    res = MappingPipeline(PipelineConfig(hierarchy="node")).map(g, alloc)
+    res = MappingPipeline(PipelineConfig(hierarchy=HierarchySpec.node())).map(g, alloc)
     assert np.array_equal(np.sort(res.task_to_proc), np.arange(100))
 
 
@@ -200,7 +201,7 @@ def test_hier_hilbert_sfc():
     coarse sweep (no silent substitution)."""
     m, alloc, g = _xk7_case(side=4, nfragments=2, seed=2)
     res = MappingPipeline(PipelineConfig(sfc="H",
-                                         hierarchy="node")).map(g, alloc)
+                                         hierarchy=HierarchySpec.node())).map(g, alloc)
     assert np.array_equal(np.sort(res.task_to_proc), np.arange(g.n))
     base = evaluate(g, alloc, identity_mapping(g, alloc))
     assert evaluate(g, alloc, res)["weighted_hops"] \
@@ -211,7 +212,7 @@ def test_hier_oversubscribed_cores():
     m = gemini_xk7(dims=(4, 4, 2), cores_per_node=4)
     alloc = sfc_allocation(m, 64, seed=0)  # 16 routers x 4 cores
     g = stencil_graph((16, 8))  # 128 tasks on 64 cores
-    res = MappingPipeline(PipelineConfig(hierarchy="node")).map(g, alloc)
+    res = MappingPipeline(PipelineConfig(hierarchy=HierarchySpec.node())).map(g, alloc)
     counts = np.bincount(res.task_to_proc, minlength=64)
     assert (counts == 2).all()  # even 2-task-per-core round-robin
 
@@ -315,7 +316,7 @@ def test_fused_refinement_bit_identity_wh(sfc):
     reproduce the host refine_swaps trajectory decision-for-decision:
     same accepted swaps, same per-round history, same final mapping."""
     m, alloc, g = _fused_refine_case()
-    kw = dict(sfc=sfc, rotations=6, hierarchy="node")
+    kw = dict(sfc=sfc, rotations=6, hierarchy=HierarchySpec.node())
     host = MappingPipeline(PipelineConfig(**kw)).map(g, alloc)
     dev = MappingPipeline(PipelineConfig(
         partition_backend="jax", score_backend="jax", **kw)).map(g, alloc)
@@ -341,7 +342,7 @@ def test_fused_refinement_bit_identity_latency_objective():
     SAME inlined scorer kind as the host comparison — the (latency_max,
     weighted_hops) trajectory must match exactly."""
     m, alloc, g = _fused_refine_case()
-    kw = dict(sfc="FZ", rotations=6, hierarchy="node",
+    kw = dict(sfc="FZ", rotations=6, hierarchy=HierarchySpec.node(),
               objective=("latency_max", "weighted_hops"))
     host = MappingPipeline(PipelineConfig(
         score_backend="jax", **kw)).map(g, alloc)
@@ -360,7 +361,7 @@ def test_fused_refinement_refine_rounds_zero():
     timings schema (history of length 1, nothing accepted)."""
     m, alloc, g = _fused_refine_case()
     res = MappingPipeline(PipelineConfig(
-        sfc="FZ", rotations=4, hierarchy="node", refine_rounds=0,
+        sfc="FZ", rotations=4, hierarchy=HierarchySpec.node(refine_rounds=0),
         partition_backend="jax", score_backend="jax")).map(g, alloc)
     assert res.stats["refine_rounds_run"] == 0
     assert res.stats["refine_accepted"] == 0
@@ -377,7 +378,7 @@ def test_fused_refinement_ladder_unfused_rung_bit_identical():
     pytest.importorskip("jax")
     from repro.serve.resilience import degradation_ladder, fused_candidate
     m, alloc, g = _fused_refine_case()
-    cfg = PipelineConfig(sfc="H", rotations=6, hierarchy="node",
+    cfg = PipelineConfig(sfc="H", rotations=6, hierarchy=HierarchySpec.node(),
                          partition_backend="jax", score_backend="jax")
     assert fused_candidate(cfg)
     ladder = dict(degradation_ladder(cfg))
@@ -402,6 +403,6 @@ def test_select_mapping_hierarchy_node_never_worse_than_default():
     ab = (1.0, 8.0, 64.0)
     g = logical_mesh_graph((2, 4, 4), ab)
     best, best_m, base_m = select_mapping(g, alloc, ab, rotations=4,
-                                          hierarchy="node")
+                                          hierarchy=HierarchySpec.node())
     assert best_m["latency_max"] <= base_m["latency_max"] + 1e-9
     assert np.array_equal(np.sort(best.task_to_proc), np.arange(32))

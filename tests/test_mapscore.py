@@ -28,7 +28,8 @@ from repro.core import metrics_jax
 from repro.core.metrics import evaluate_candidates, get_evaluator
 from repro.kernels.mapscore import ops as mops
 from repro.kernels.mapscore.ref import mapscore_ref
-from repro.mapping import CandidateSearch, MappingPipeline, PipelineConfig
+from repro.mapping import (CandidateSearch, HierarchySpec,
+                           MappingPipeline, PipelineConfig)
 from repro.mapping.candidates import rotation_candidates
 
 
@@ -203,7 +204,7 @@ def test_hier_refine_pallas_backend_monotone():
     alloc = block_allocation(machine)
     g = stencil_graph((8, 8))
     res = MappingPipeline(PipelineConfig(
-        hierarchy="node", rotations=4, refine_rounds=2,
+        hierarchy=HierarchySpec.node(refine_rounds=2), rotations=4,
         score_backend="pallas")).map(g, alloc)
     hist = res.stats["refine_history"]
     for earlier, later in zip(hist, hist[1:]):

@@ -20,6 +20,7 @@ import pytest
 
 from repro import faults, obs
 from repro.core import Mapper, MapperConfig, make_machine, stencil_graph
+from repro.hier import HierarchySpec
 from repro.core.machine import block_allocation
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import Tracer
@@ -362,8 +363,9 @@ def test_flat_timings_schema_is_span_derived():
 
 def test_hier_timings_schema_is_span_derived():
     m, alloc, g = _flat_case()
-    res = Mapper(MapperConfig(sfc="FZ", rotations=4,
-                              hierarchy="node")).map(g, alloc)
+    res = Mapper(MapperConfig(
+        sfc="FZ", rotations=4,
+        hierarchy=HierarchySpec.node())).map(g, alloc)
     t = res.stats["timings"]
     assert {"coarsen_s", "partition_s", "score_s", "refine_s",
             "total_s"} <= set(t)

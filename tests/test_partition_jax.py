@@ -340,10 +340,11 @@ def test_fused_hierarchical_matches_numpy():
     from repro.mapping.pipeline import MappingPipeline, PipelineConfig
 
     graph, alloc = _mesh_problem()
-    base = MappingPipeline(PipelineConfig(rotations=4, hierarchy="node")
-                           ).map(graph, alloc)
+    from repro.hier import HierarchySpec
+    base = MappingPipeline(PipelineConfig(
+        rotations=4, hierarchy=HierarchySpec.node())).map(graph, alloc)
     fused = MappingPipeline(PipelineConfig(
-        rotations=4, hierarchy="node", score_backend="jax",
+        rotations=4, hierarchy=HierarchySpec.node(), score_backend="jax",
         partition_backend="jax")).map(graph, alloc)
     assert np.array_equal(base.task_to_proc, fused.task_to_proc)
     assert "refine_s" in fused.stats["timings"]
